@@ -1,0 +1,76 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import make_pipeline
+from repro.models.model import build_model
+from repro.optim.optimizer import Optimizer, apply_updates
+
+
+def train_transformer(
+    cfg, lr: float, steps: int, batch_size: int = 8, seq_len: int = 64,
+    optimizer: str = "adam", seed: int = 0, schedule=None,
+) -> List[float]:
+    """Train a transformer config briefly; returns the loss curve."""
+    cfg = cfg.replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = Optimizer.create(
+        optimizer, lr=lr, parametrization=model.p13n, meta=model.meta,
+        schedule=schedule,
+    )
+    state = opt.init(params)
+    pipe = make_pipeline(cfg.vocab_size, seq_len, batch_size, seed=seed)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, g = jax.value_and_grad(model.loss_fn)(params, batch)
+        updates, state = opt.update(g, state, params)
+        return apply_updates(params, updates), state, loss
+
+    losses = []
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+        params, state, loss = step(params, state, batch)
+        lf = float(loss)
+        losses.append(lf if np.isfinite(lf) else float("inf"))
+        if not np.isfinite(lf):
+            break
+    return losses
+
+
+def final_loss(losses: Sequence[float], tail: int = 5) -> float:
+    seg = [l for l in losses[-tail:] if np.isfinite(l)]
+    return float(np.mean(seg)) if seg else float("inf")
+
+
+def optimum_shift_log2(
+    curve_by_width: Dict[int, Dict[float, float]]
+) -> float:
+    """|log2(argmin_lr at max width) - log2(argmin_lr at min width)| — the
+    Fig. 1/3 instability metric (0 == perfectly stable optimum)."""
+    widths = sorted(curve_by_width)
+    def argmin_lr(w):
+        d = curve_by_width[w]
+        return min(d, key=d.get)
+    return abs(
+        np.log2(argmin_lr(widths[-1])) - np.log2(argmin_lr(widths[0]))
+    )
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.time()
+
+    def us(self) -> float:
+        return (time.time() - self.t0) * 1e6
+
+
+def report(name: str, us: float, derived: str):
+    print(f"{name},{us:.0f},{derived}", flush=True)

@@ -1,0 +1,54 @@
+"""Fig. 1: Transformer LR-vs-loss across widths (Adam), SP vs muP.
+
+Claim reproduced at CPU scale: the muP optimum is width-stable and wide-muP
+at the proxy's best LR beats wide-SP at the proxy's best LR."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    Timer, final_loss, optimum_shift_log2, report, train_transformer,
+)
+from repro.configs import get_smoke_config
+
+WIDTH_FACTORS = (1.0, 2.0, 4.0)
+LRS = tuple(float(2.0**z) for z in np.arange(-10, -3, 1.0))
+STEPS = 40
+
+
+def run():
+    t = Timer()
+    base = get_smoke_config("mup-gpt")
+    results = {}
+    for p13n in ("sp", "mup"):
+        curve = {}
+        for f in WIDTH_FACTORS:
+            cfg = base.scaled(f).replace(parametrization=p13n)
+            w = cfg.d_model
+            curve[w] = {
+                lr: final_loss(train_transformer(cfg, lr, STEPS)) for lr in LRS
+            }
+        results[p13n] = curve
+    shift_sp = optimum_shift_log2(results["sp"])
+    shift_mup = optimum_shift_log2(results["mup"])
+    widths = sorted(results["mup"])
+    small, big = widths[0], widths[-1]
+    best_small = {
+        p: min(results[p][small], key=results[p][small].get)
+        for p in ("sp", "mup")
+    }
+    loss_big = {p: results[p][big][best_small[p]] for p in ("sp", "mup")}
+    derived = (
+        f"shift_sp_log2={shift_sp:.1f};shift_mup_log2={shift_mup:.1f};"
+        f"transfer_loss_sp={loss_big['sp']:.4f};"
+        f"transfer_loss_mup={loss_big['mup']:.4f}"
+    )
+    report("fig1_transformer_lr_stability", t.us(), derived)
+    return {
+        "shift_sp": shift_sp, "shift_mup": shift_mup,
+        "transferred": loss_big, "curves": results,
+    }
+
+
+if __name__ == "__main__":
+    run()

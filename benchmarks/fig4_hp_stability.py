@@ -1,0 +1,66 @@
+"""Fig. 4: stability of other muTransferable HPs across width in muP —
+output multiplier alpha_output, init sigma, and LR schedule ranking."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    Timer, final_loss, optimum_shift_log2, report, train_transformer,
+)
+from repro.configs import get_smoke_config
+from repro.optim import schedules as sched_lib
+
+WIDTH_FACTORS = (1.0, 4.0)
+STEPS = 40
+LR = 2e-3
+
+
+def _sweep(base, field, values):
+    out = {}
+    for f in WIDTH_FACTORS:
+        cfg0 = base.scaled(f)
+        w = cfg0.d_model
+        out[w] = {
+            v: final_loss(train_transformer(cfg0.replace(**{field: v}), LR, STEPS))
+            for v in values
+        }
+    return out
+
+
+def run():
+    t = Timer()
+    base = get_smoke_config("mup-gpt").replace(parametrization="mup")
+    alpha_curve = _sweep(base, "alpha_output", tuple(2.0**z for z in range(-3, 4, 2)))
+    sigma_curve = _sweep(base, "sigma", tuple(2.0**z for z in range(-3, 3)))
+
+    # schedule *ranking* stability across widths
+    scheds = {
+        "constant": sched_lib.make_schedule("constant"),
+        "linear": sched_lib.make_schedule("linear", total_steps=STEPS),
+        "cosine": sched_lib.make_schedule("cosine", total_steps=STEPS),
+        "inv_sqrt": sched_lib.make_schedule("inv_sqrt", warmup_steps=5),
+    }
+    sched_rank = {}
+    for f in WIDTH_FACTORS:
+        cfg = base.scaled(f)
+        losses = {
+            name: final_loss(train_transformer(cfg, LR, STEPS, schedule=s))
+            for name, s in scheds.items()
+        }
+        sched_rank[cfg.d_model] = sorted(losses, key=losses.get)
+
+    widths = sorted(sched_rank)
+    best_sched_stable = sched_rank[widths[0]][0] == sched_rank[widths[-1]][0]
+    derived = (
+        f"alpha_shift_log2={optimum_shift_log2(alpha_curve):.1f};"
+        f"sigma_shift_log2={optimum_shift_log2(sigma_curve):.1f};"
+        f"best_sched_stable={best_sched_stable}"
+    )
+    report("fig4_hp_stability", t.us(), derived)
+    return {
+        "alpha": alpha_curve, "sigma": sigma_curve, "sched_rank": sched_rank,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Fig. 5: coordinate-size growth with width after a few Adam steps —
+logits blow up in SP, stay Theta(1) in muP (the coordinate check)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, report
+from repro.configs import get_smoke_config
+from repro.core.coord_check import coord_check
+from repro.core.parametrization import Parametrization
+from repro.data.pipeline import make_pipeline
+from repro.models.model import build_model
+
+WIDTHS = (1.0, 2.0, 4.0, 8.0)
+
+
+def run():
+    t = Timer()
+    base = get_smoke_config("mup-gpt").replace(
+        dtype="float32", n_layers=2, zero_init_readout=False,
+        zero_init_query=False,
+    )
+    pipe = make_pipeline(256, 32, 8, seed=0)
+    batches = [
+        {k: jnp.asarray(v) for k, v in pipe.batch(i).items()} for i in range(4)
+    ]
+    slopes = {}
+    for p13n in ("sp", "mup"):
+        def make_model(i):
+            cfg = base.scaled(WIDTHS[i]).replace(parametrization=p13n)
+            model = build_model(cfg)
+            params = model.init(jnp.asarray([0, 0], jnp.uint32))
+            def loss_fn(params, batch):
+                return model.loss_fn(params, batch, collect_acts=True)
+            return params, model.meta, loss_fn
+
+        res = coord_check(
+            make_model, widths=list(range(len(WIDTHS))), batches=batches,
+            parametrization=Parametrization(p13n), optimizer="adam", lr=2e-2,
+        )
+        res.records = {int(64 * WIDTHS[i]): v for i, v in res.records.items()}
+        slopes[p13n] = res.growth("logits.delta", t=-1)
+    derived = (
+        f"logit_delta_growth_slope_sp={slopes['sp']:.2f};"
+        f"logit_delta_growth_slope_mup={slopes['mup']:.2f}"
+    )
+    report("fig5_coord_check", t.us(), derived)
+    return slopes
+
+
+if __name__ == "__main__":
+    run()

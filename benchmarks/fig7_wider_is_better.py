@@ -1,0 +1,43 @@
+"""Fig. 7/8: 'wider is always better' throughout training in muP (for a
+fixed HP combination), but not in SP with a large LR."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, report, train_transformer
+from repro.configs import get_smoke_config
+
+WIDTH_FACTORS = (1.0, 2.0, 4.0)
+STEPS = 40
+LR = 6e-3  # fixed, slightly aggressive — SP wide models suffer, muP don't
+
+
+def run():
+    t = Timer()
+    base = get_smoke_config("mup-gpt")
+    finals = {}
+    for p13n in ("sp", "mup"):
+        finals[p13n] = []
+        for f in WIDTH_FACTORS:
+            cfg = base.scaled(f).replace(parametrization=p13n)
+            losses = train_transformer(cfg, LR, STEPS)
+            finals[p13n].append(float(np.mean(losses[-5:])))
+    mup_monotone = all(
+        finals["mup"][i + 1] <= finals["mup"][i] + 1e-3
+        for i in range(len(WIDTH_FACTORS) - 1)
+    )
+    sp_monotone = all(
+        finals["sp"][i + 1] <= finals["sp"][i] + 1e-3
+        for i in range(len(WIDTH_FACTORS) - 1)
+    )
+    derived = (
+        f"mup_wider_is_better={mup_monotone};sp_wider_is_better={sp_monotone};"
+        f"mup_final_losses={';'.join(f'{x:.3f}' for x in finals['mup'])};"
+        f"sp_final_losses={';'.join(f'{x:.3f}' for x in finals['sp'])}"
+    )
+    report("fig7_wider_is_better", t.us(), derived)
+    return finals
+
+
+if __name__ == "__main__":
+    run()

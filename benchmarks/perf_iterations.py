@@ -1,0 +1,202 @@
+"""§Perf hillclimb harness: compile named variants of a (arch × shape) cell
+and compare scan-trip-corrected roofline terms against the baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations \
+        --arch gemma2-27b --shape train_4k \
+        --variants baseline,attn_bf16,chunk_1024
+
+Each run writes experiments/perf/<arch>_<shape>__<variant>.json, and the
+comparison table prints the three terms + dominant-term delta vs baseline.
+NOTE: spawns a subprocess per variant (the 512-device XLA flag must be set
+before jax initializes, and each compile is cleanest in a fresh process).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Any, Dict
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+DP_ONLY_PATCH = {
+    # pure (ZeRO-)DP: batch over the whole chip grid, no tensor parallelism;
+    # weights fully sharded over all 256 chips and all-gathered per layer.
+    "batch": ("data", "model"),
+    "heads": None, "kv_heads": None, "head_dim": None,
+    "ffn": None, "vocab": None, "experts": None,
+    "fsdp": ("data", "model"),
+}
+
+VARIANTS: Dict[str, Dict[str, Any]] = {
+    "baseline": {},
+    # NOTE: "baseline" records predate the adoption of the §Perf wins as
+    # framework defaults; "opt_defaults" is a fresh compile with them in.
+    "opt_defaults": {},
+    "opt_blocks": {"remat": "blocks"},
+    "opt2": {},                         # after w_fsdp/vocab output-dim FSDP
+    "opt2_blocks": {"remat": "blocks"},
+    "remat_none": {"remat": "none"},
+    "no_fsdp": {"fsdp": False},
+    "dp_only": {"rules_patch": DP_ONLY_PATCH},
+    "attn_bf16": {"extra_overrides": {"attn_acc": "bfloat16"}},
+    "chunk_512": {"extra_overrides": {"attn_chunk": 512}},
+    "chunk_1024": {"extra_overrides": {"attn_chunk": 1024}},
+    "chunk_4096": {"extra_overrides": {"attn_chunk": 4096}},
+    "mem_combo": {
+        "extra_overrides": {"attn_acc": "bfloat16", "attn_chunk": 1024},
+    },
+    "mem_combo_nofsdp": {
+        "fsdp": False,
+        "extra_overrides": {"attn_acc": "bfloat16", "attn_chunk": 1024},
+    },
+    "cap_1_0": {"extra_overrides": {"capacity_factor": 1.0}},
+    "cap_2_0": {"extra_overrides": {"capacity_factor": 2.0}},
+    "dp_only_attnbf16": {
+        "rules_patch": DP_ONLY_PATCH,
+        "extra_overrides": {"attn_acc": "bfloat16"},
+    },
+    "bf16_gather": {"extra_overrides": {"bf16_param_gather": True}},
+    "remat_full": {"remat": "full"},
+    "dp_remat": {"rules_patch": DP_ONLY_PATCH, "remat": "full"},
+    "remat_blocks": {"remat": "blocks"},
+    "remat_blocks_bf16g": {"remat": "blocks", "extra_overrides": {"bf16_param_gather": True}},
+    "dp_remat_bf16g": {
+        "rules_patch": DP_ONLY_PATCH, "remat": "full",
+        "extra_overrides": {"bf16_param_gather": True},
+    },
+    "bf16_gather_cap1": {
+        "extra_overrides": {"bf16_param_gather": True, "capacity_factor": 1.0},
+    },
+    # FSDP on the *output* (ffn) dim instead of the contraction dim: kills
+    # the SPMD resharding collective-permutes on x @ w_in
+    "fsdp_out": {"rules_patch": {"ffn": ("model", "data"), "fsdp": None}},
+    # don't TP the QK contraction dim (head_dim) in training — with few kv
+    # heads SPMD otherwise all-gathers K/V to the global batch in f32
+    "attn_tp_fix": {"rules_patch": {"head_dim": None}},
+    "tp_fix_fsdp_out": {
+        "rules_patch": {"head_dim": None, "ffn": ("model", "data"),
+                        "fsdp": None},
+    },
+    "tp_fix_fsdp_out_cap1": {
+        "rules_patch": {"head_dim": None, "ffn": ("model", "data"),
+                        "fsdp": None},
+        "extra_overrides": {"capacity_factor": 1.0},
+    },
+    "tp_fix_fo_cap1_blocks": {
+        "rules_patch": {"head_dim": None, "ffn": ("model", "data"),
+                        "fsdp": None},
+        "remat": "blocks",
+        "extra_overrides": {"capacity_factor": 1.0},
+    },
+    "fsdp_out_bf16g": {
+        "rules_patch": {"ffn": ("model", "data"), "fsdp": None},
+        "extra_overrides": {"bf16_param_gather": True},
+    },
+    "fsdp_out_blocks": {
+        "rules_patch": {"ffn": ("model", "data"), "fsdp": None},
+        "remat": "blocks",
+        "extra_overrides": {"bf16_param_gather": True},
+    },
+}
+
+WORKER = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json, sys
+sys.path.insert(0, {src!r})
+from repro.launch.dryrun import lower_cell
+spec = json.loads({spec!r})
+rec = lower_cell(
+    spec["arch"], spec["shape"], multi_pod=False,
+    fsdp=spec.get("fsdp", True),
+    remat=spec.get("remat"),
+    extra_overrides=spec.get("extra_overrides"),
+    rules_patch={{k: (tuple(v) if isinstance(v, list) else v)
+                 for k, v in (spec.get("rules_patch") or {{}}).items()}} or None,
+)
+with open(spec["out"], "w") as f:
+    json.dump(rec, f, indent=2)
+print("WORKER_DONE", rec.get("error", "ok"))
+"""
+
+
+def run_variant(arch: str, shape: str, variant: str, out_dir: str) -> Dict:
+    os.makedirs(out_dir, exist_ok=True)
+    out = os.path.join(out_dir, f"{arch}_{shape}__{variant}.json")
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    spec = dict(VARIANTS[variant])
+    spec.update({"arch": arch, "shape": shape, "out": out})
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    code = WORKER.format(src=os.path.abspath(src), spec=json.dumps(spec))
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=3600,
+    )
+    if not os.path.exists(out):
+        raise RuntimeError(
+            f"variant {variant} failed:\n{proc.stdout[-2000:]}\n{proc.stderr[-3000:]}"
+        )
+    with open(out) as f:
+        return json.load(f)
+
+
+def terms(rec: Dict) -> Dict[str, float]:
+    c = rec.get("costed", {})
+    out = {
+        "compute_ms": 1e3 * c.get("flops", 0) / PEAK_FLOPS,
+        "memory_ms": 1e3 * c.get("bytes", 0) / HBM_BW,
+        "collective_ms": 1e3 * c.get("collective_bytes", 0) / ICI_BW,
+        "temp_gib": rec.get("memory_analysis", {}).get("temp_size_in_bytes", 0)
+        / 2**30,
+    }
+    out["dominant_ms"] = max(
+        out["compute_ms"], out["memory_ms"], out["collective_ms"]
+    )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    rows = {}
+    for v in args.variants.split(","):
+        try:
+            rec = run_variant(args.arch, args.shape, v, args.out)
+            rows[v] = terms(rec)
+            err = rec.get("error") or rec.get("costing_error")
+            if err:
+                rows[v]["error"] = err
+        except Exception as e:
+            rows[v] = {"error": repr(e)}
+        print(f"[{v}] {rows[v]}", flush=True)
+
+    base = rows.get("baseline", {})
+    print("\nvariant            compute  memory  collective  temp(GiB)  dom Δ%")
+    for v, r in rows.items():
+        if "compute_ms" not in r:
+            print(f"{v:18s} ERROR {r.get('error')}")
+            continue
+        dd = (
+            100 * (r["dominant_ms"] - base["dominant_ms"]) / base["dominant_ms"]
+            if base.get("dominant_ms") else float("nan")
+        )
+        print(
+            f"{v:18s} {r['compute_ms']:8.2f} {r['memory_ms']:7.2f} "
+            f"{r['collective_ms']:10.2f} {r['temp_gib']:9.1f} {dd:+7.1f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from
+the dry-run artifacts in experiments/dryrun/*.json.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  All dry-run quantities are PER-DEVICE (XLA cost_analysis reports the
+partitioned module), so each term is simply per_device_quantity / per_chip
+rate:
+
+    compute_s    = flops / 197e12
+    memory_s     = bytes_accessed / 819e9
+    collective_s = collective_bytes / 50e9
+
+`costed` numbers are scan-trip-corrected (see launch/dryrun.costed_terms).
+MODEL_FLOPS = 6*N*D (train) or 2*N*D (fwd-only), N = active params, D =
+tokens/device — the useful-compute ratio flags remat/dispatch overheads.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+SHAPE_TOKENS = {
+    "train_4k": 256 * 4096,
+    "prefill_32k": 32 * 32768,
+    "decode_32k": 128 * 1,
+    "long_500k": 1 * 1,
+}
+
+
+def analyse_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("skipped") or rec.get("error"):
+        return None
+    costed = rec.get("costed")
+    if not costed:
+        return None
+    chips = rec["chips"]
+    flops = costed["flops"]
+    byts = costed["bytes"]
+    coll = costed["collective_bytes"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    bottleneck = max(terms, key=terms.get)
+    tokens_per_dev = SHAPE_TOKENS[rec["shape"]] / chips
+    n_active = rec["active_param_count"]
+    mult = 6 if rec["kind"] == "train" else 2
+    model_flops = mult * n_active * tokens_per_dev
+    useful = model_flops / flops if flops else 0.0
+    # roofline fraction: the useful-model-compute time over the dominant term
+    step_s = max(terms.values())
+    roofline_frac = (model_flops / PEAK_FLOPS) / step_s if step_s else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": model_flops,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": useful,
+        "roofline_frac": roofline_frac,
+        "temp_gib": rec.get("memory_analysis", {}).get(
+            "temp_size_in_bytes", 0
+        ) / 2**30,
+    }
+
+
+def load_table(
+    dryrun_dir: str = "experiments/dryrun",
+    fallback_dir: str = "experiments/dryrun_v0_baseline",
+) -> List[Dict]:
+    """One row per analysable *_single.json; if a cell is missing/incomplete
+    in `dryrun_dir` (e.g. a re-sweep still in flight) fall back to the
+    archived baseline record for that cell (flagged `from_baseline`)."""
+    rows = []
+    names = set()
+    for d in (dryrun_dir, fallback_dir):
+        if os.path.isdir(d):
+            names |= {
+                os.path.basename(p)
+                for p in glob.glob(os.path.join(d, "*_single.json"))
+            }
+    for name in sorted(names):
+        row = None
+        for d, flag in ((dryrun_dir, False), (fallback_dir, True)):
+            p = os.path.join(d, name)
+            if d == fallback_dir and dryrun_dir == fallback_dir:
+                continue
+            if not os.path.exists(p):
+                continue
+            with open(p) as f:
+                rec = json.load(f)
+            row = analyse_record(rec)
+            if row:
+                row["from_baseline"] = flag
+                break
+        if row:
+            rows.append(row)
+    return rows
+
+
+def fmt_ms(x: float) -> str:
+    return f"{x*1e3:.2f}"
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "bottleneck | useful FLOP ratio | roofline frac |\n"
+        "|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_ms(r['compute_s'])} | "
+            f"{fmt_ms(r['memory_s'])} | {fmt_ms(r['collective_s'])} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2%} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def baseline_vs_optimized() -> str:
+    """If the pre-optimization sweep archive exists, emit a before/after
+    table (the §Perf summary over ALL cells, not just the 3 hillclimbed)."""
+    v0 = load_table("experiments/dryrun_v0_baseline")
+    v1 = load_table("experiments/dryrun")
+    if not v0 or not v1:
+        return ""
+    idx0 = {(r["arch"], r["shape"]): r for r in v0}
+    lines = [
+        "| cell | dominant term v0 (ms) | v1 (ms) | Δ | roofline frac v0 → v1 |",
+        "|---|---|---|---|---|",
+    ]
+    for r in sorted(v1, key=lambda r: (r["arch"], r["shape"])):
+        r0 = idx0.get((r["arch"], r["shape"]))
+        if not r0 or r.get("from_baseline"):
+            continue  # cell not yet re-swept with the optimized defaults
+        d0 = max(r0["compute_s"], r0["memory_s"], r0["collective_s"])
+        d1 = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        delta = (d1 - d0) / d0 * 100 if d0 else 0.0
+        lines.append(
+            f"| {r['arch']}/{r['shape']} | {d0*1e3:.1f} | {d1*1e3:.1f} | "
+            f"{delta:+.1f}% | {r0['roofline_frac']:.2%} → "
+            f"{r['roofline_frac']:.2%} |"
+        )
+    return "\n".join(lines)
+
+
+def run():
+    import time
+    t0 = time.time()
+    rows = load_table()
+    if not rows:
+        print("roofline,0,no-dryrun-artifacts-found")
+        return []
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/roofline.md", "w") as f:
+        f.write(markdown_table(rows) + "\n")
+        cmp_table = baseline_vs_optimized()
+        if cmp_table:
+            f.write("\n## baseline (v0) vs optimized defaults (v1)\n\n")
+            f.write(cmp_table + "\n")
+    with open("experiments/roofline.json", "w") as f:
+        json.dump(rows, f, indent=2)
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    best = max(rows, key=lambda r: r["roofline_frac"])
+    coll_bound = [r for r in rows if r["bottleneck"] == "collective"]
+    derived = (
+        f"cells={len(rows)};best={best['arch']}/{best['shape']}@"
+        f"{best['roofline_frac']:.2%};worst={worst['arch']}/{worst['shape']}@"
+        f"{worst['roofline_frac']:.2%};collective_bound={len(coll_bound)}"
+    )
+    print(f"roofline,{(time.time()-t0)*1e6:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

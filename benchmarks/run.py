@@ -1,0 +1,53 @@
+"""Benchmark harness entry: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Run with:
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig1_transformer_lr_stability,
+        fig3_mlp_lr_stability,
+        fig4_hp_stability,
+        fig5_coord_check,
+        fig7_wider_is_better,
+        roofline,
+        table4_mutransfer_vs_direct,
+    )
+
+    benches = {
+        "fig3": fig3_mlp_lr_stability,
+        "fig1": fig1_transformer_lr_stability,
+        "fig4": fig4_hp_stability,
+        "fig5": fig5_coord_check,
+        "fig7": fig7_wider_is_better,
+        "table4": table4_mutransfer_vs_direct,
+        "roofline": roofline,
+    }
+    failures = 0
+    print("name,us_per_call,derived")
+    for name, mod in benches.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{name},0,FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

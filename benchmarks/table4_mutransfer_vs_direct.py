@@ -1,0 +1,67 @@
+"""Table 4/5: muTransfer vs direct tuning at matched compute.
+
+The proxy model is ~16x cheaper per trial (width/4), so at equal compute the
+muTransfer arm affords 16x the HP samples.  We run N_direct random-search
+samples on the TARGET vs 16*N_direct samples on the PROXY (then one target
+run with the winner), and compare target losses.  Paper claim: the
+muTransfer arm matches or beats direct tuning at the same budget."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, final_loss, report, train_transformer
+from repro.configs import get_smoke_config
+from repro.core.transfer import make_proxy
+from repro.core.tuning import SearchSpace, random_search
+
+STEPS = 30
+N_DIRECT = 2
+COST_RATIO = 8  # proxy trials per direct trial at equal FLOPs (conservative)
+
+
+def run():
+    t = Timer()
+    target = get_smoke_config("mup-gpt").scaled(4.0).replace(dtype="float32")
+    proxy = make_proxy(target, width_factor=0.25, min_d_head=16)
+    space = SearchSpace(
+        lr=tuple(5e-3 * 2.0**z for z in np.arange(-2, 2.5, 0.5)),
+        sigma=(0.5, 1.0, 2.0),
+        alpha_output=(0.25, 1.0, 4.0),
+        alpha_attn=(1.0,),
+        alpha_embed=(1.0,),
+    )
+
+    def eval_on(cfg):
+        def eval_fn(hps):
+            c = cfg.replace(
+                sigma=hps.sigma, alpha_output=hps.alpha_output,
+                alpha_attn=hps.alpha_attn, alpha_embed=hps.alpha_embed,
+            )
+            return final_loss(train_transformer(c, hps.lr, STEPS))
+        return eval_fn
+
+    # arm 1: direct tuning on the target, N_DIRECT samples
+    best_direct, trials_d = random_search(
+        target, n_samples=N_DIRECT, space=space, eval_fn=eval_on(target),
+        seed=0,
+    )
+    direct_loss = min(s for _, s in trials_d)
+
+    # arm 2: muTransfer — COST_RATIO * N_DIRECT samples on the proxy
+    best_proxy, trials_p = random_search(
+        proxy, n_samples=COST_RATIO * N_DIRECT, space=space,
+        eval_fn=eval_on(proxy), seed=1,
+    )
+    transfer_loss = eval_on(target)(best_proxy)
+
+    derived = (
+        f"direct_target_loss={direct_loss:.4f};"
+        f"mutransfer_target_loss={transfer_loss:.4f};"
+        f"samples_direct={N_DIRECT};samples_proxy={COST_RATIO * N_DIRECT}"
+    )
+    report("table4_mutransfer_vs_direct", t.us(), derived)
+    return {"direct": direct_loss, "mutransfer": transfer_loss}
+
+
+if __name__ == "__main__":
+    run()

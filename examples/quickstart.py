@@ -1,0 +1,63 @@
+"""Quickstart: build a muP model, train briefly, watch the loss drop.
+
+    PYTHONPATH=src python examples/quickstart.py [--arch smollm-135m]
+
+Every assigned architecture works via --arch (reduced smoke config by
+default so it runs in seconds on CPU; pass --full for the real config).
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.data.pipeline import make_pipeline
+from repro.models.model import build_model
+from repro.optim.optimizer import Optimizer, apply_updates
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mup-gpt", choices=list_archs())
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    args = ap.parse_args()
+
+    cfg = (get_config if args.full else get_smoke_config)(args.arch)
+    cfg = cfg.replace(dtype="float32")
+    print(f"arch={cfg.name}  params≈{cfg.param_count()/1e6:.1f}M  "
+          f"parametrization={cfg.parametrization}")
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = Optimizer.create(
+        "adamw", lr=args.lr, parametrization=model.p13n, meta=model.meta,
+        weight_decay=0.01,
+    )
+    state = opt.init(params)
+    pipe = make_pipeline(cfg.vocab_size, seq_len=64, global_batch=8)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, g = jax.value_and_grad(model.loss_fn)(params, batch)
+        updates, state = opt.update(g, state, params)
+        return apply_updates(params, updates), state, loss
+
+    for t in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+        if cfg.n_image_tokens:
+            batch["images"] = jnp.zeros(
+                (8, cfg.n_image_tokens, cfg.frontend_feat_dim)
+            )
+        if cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (8, cfg.encoder_seq, cfg.frontend_feat_dim)
+            )
+        params, state, loss = step(params, state, batch)
+        if t % 10 == 0 or t == args.steps - 1:
+            print(f"step {t:4d}  loss {float(loss):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Config registry: ``get_config("<arch-id>")`` for every assigned arch."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+
+ARCHS = (
+    "gemma2_27b",
+    "gemma2_2b",
+    "smollm_360m",
+    "smollm_135m",
+    "recurrentgemma_9b",
+    "whisper_small",
+    "mixtral_8x22b",
+    "llama4_scout_17b_a16e",
+    "llama_3_2_vision_90b",
+    "mamba2_130m",
+    # paper models
+    "mup_gpt",
+)
+
+_ALIASES = {
+    "gemma2-27b": "gemma2_27b",
+    "gemma2-2b": "gemma2_2b",
+    "smollm-360m": "smollm_360m",
+    "smollm-135m": "smollm_135m",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "whisper-small": "whisper_small",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "llama-3.2-vision-90b": "llama_3_2_vision_90b",
+    "mamba2-130m": "mamba2_130m",
+    "mup-gpt": "mup_gpt",
+}
+
+
+def get_config(arch: str, **overrides) -> ModelConfig:
+    mod_name = _ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    if mod_name not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ALIASES)}")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg: ModelConfig = mod.CONFIG
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def get_smoke_config(arch: str, **overrides) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod_name = _ALIASES.get(arch, arch).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    cfg: ModelConfig = mod.SMOKE
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def list_archs():
+    return list(_ALIASES)

@@ -1,0 +1,235 @@
+"""Config system: one frozen dataclass describing a model + its muP base shape.
+
+Every assigned architecture is a ``ModelConfig`` instance in its own module
+(``repro.configs.<arch_id>``), selectable by ``--arch <id>``.  Width fields
+have parallel ``base_*`` fields: the muP base shape (Eq. 4).  By default
+``base_* == *`` (pure SP compatibility at own width); `scaled(...)` and
+`proxy(...)` derive wider/narrower family members sharing the same base, which
+is what makes zero-shot muTransfer a config-level operation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# Layer-block vocabulary used in `pattern` (one *group* that repeats):
+#   "attn"        global self-attention + MLP
+#   "local"       sliding-window self-attention + MLP
+#   "cross"       cross-attention (to encoder/image memory) + MLP
+#   "moe"         global self-attention + MoE FFN
+#   "local_moe"   sliding-window self-attention + MoE FFN
+#   "recurrent"   RG-LRU temporal-mixing block + MLP
+#   "ssd"         Mamba-2 SSD mixer block (no separate MLP; d_ff unused)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # "lm" | "encdec"
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab_size: int
+
+    # repeating block pattern; len(pattern) * n_groups (+ len(tail)) == n_layers
+    pattern: Tuple[str, ...] = ("attn",)
+    tail: Tuple[str, ...] = ()
+
+    # ---- muP base shape (defaults filled in __post_init__) --------------
+    base_d_model: Optional[int] = None
+    base_n_heads: Optional[int] = None
+    base_n_kv_heads: Optional[int] = None
+    base_d_head: Optional[int] = None
+    base_d_ff: Optional[int] = None
+
+    # ---- attention details ----------------------------------------------
+    window_size: int = 4096           # for "local*" blocks
+    attn_chunk: int = 2048            # q-chunk size for long-seq attention
+    attn_acc: str = "float32"         # attention logit/softmax compute dtype
+                                      # ("bfloat16" halves live logit buffers
+                                      #  — beyond-paper memory optimization)
+    attn_softcap: float = 0.0         # gemma2: softcap on attention logits
+    final_softcap: float = 0.0        # gemma2: softcap on output logits
+    rope_theta: float = 10000.0
+    use_qk_norm: bool = False
+
+    # ---- MoE --------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # ---- SSM (mamba2) / RG-LRU (recurrentgemma) ---------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_n_heads: int = 0              # mamba2 heads (d_inner / head_dim)
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    conv_width: int = 4
+    lru_width: Optional[int] = None   # RG-LRU recurrence width (default d_model)
+
+    # ---- encoder-decoder (whisper) ----------------------------------------
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500           # precomputed frame embeddings (stub frontend)
+
+    # ---- VLM (llama-3.2-vision) -------------------------------------------
+    n_image_tokens: int = 0           # precomputed patch embeddings (stub frontend)
+    frontend_feat_dim: int = 0        # finite feature dim of the stub frontend
+
+    # ---- kernels ------------------------------------------------------------
+    use_pallas: bool = False          # TPU target: Pallas flash-attention path
+
+    # ---- distributed-training tricks ---------------------------------------
+    # "tp": TP over the model axis + FSDP (default, big models)
+    # "dp": pure ZeRO-DP over every chip (right for sub-1B models; §Perf)
+    parallelism: str = "tp"
+
+    # cast fp32 master params to bf16 *before* the forward pass so FSDP
+    # weight all-gathers move bf16, not fp32 (halves gather bytes; grads
+    # still accumulate fp32 into the sharded master copy).
+    bf16_param_gather: bool = False
+
+    # ---- lowering -----------------------------------------------------------
+    # scan over stacked layer groups (O(1) HLO in depth). The dry-run's
+    # costing pass sets this False on 1-2 group variants because XLA's
+    # cost_analysis counts while-loop bodies once, not x trip-count.
+    scan_layers: bool = True
+
+    # ---- muP / HPs (the muTransferable set, Table 2) ----------------------
+    parametrization: str = "mup"
+    sigma: float = 1.0                # base init std scale
+    alpha_output: float = 1.0
+    alpha_attn: float = 1.0
+    alpha_embed: float = 1.0          # embedding multiplier (GPT-3 sweep, App F.4)
+    zero_init_readout: bool = True    # App. D.2
+    zero_init_query: bool = True      # App. D.2
+    tie_embeddings: bool = True
+
+    # ---- misc architecture -------------------------------------------------
+    act: str = "gelu_glu"             # "gelu" | "relu" | "gelu_glu" | "silu_glu"
+    norm_eps: float = 1e-6
+    post_attn_norm: bool = False      # gemma2 uses post-norms too
+    dtype: str = "bfloat16"           # activation dtype
+    remat: str = "none"               # "none" | "full"
+    max_seq_len: int = 8192
+
+    def __post_init__(self):
+        for f in ("d_model", "n_heads", "n_kv_heads", "d_head", "d_ff"):
+            if getattr(self, f"base_{f}") is None:
+                object.__setattr__(self, f"base_{f}", getattr(self, f))
+        ng, rem = divmod(self.n_layers - len(self.tail), max(len(self.pattern), 1))
+        if rem != 0:
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} does not decompose into "
+                f"pattern {self.pattern} x{ng} + tail {self.tail}"
+            )
+
+    # ------------------------------------------------------------------
+    @property
+    def n_groups(self) -> int:
+        return (self.n_layers - len(self.tail)) // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:
+        """SSD inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def width_mult(self) -> float:
+        return self.d_model / self.base_d_model
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------------------
+    def scaled(self, width_factor: float, min_d_head: int = 32) -> "ModelConfig":
+        """A same-family model with widths scaled by `width_factor`, sharing
+        this config's base shape — the muTransfer family operation.
+
+        Keeps d_head >= min_d_head (App. D.4) by moving width into n_heads.
+        """
+        def r(x, q=1):
+            return max(int(round(x * width_factor / q)) * q, q)
+
+        d_model = r(self.d_model)
+        d_head = max(r(self.d_head), min_d_head)
+        n_heads = max(d_model // d_head, 1)
+        n_kv = max(min(self.n_kv_heads, n_heads), 1)
+        return self.replace(
+            d_model=d_model,
+            d_ff=r(self.d_ff),
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_head=d_head,
+            lru_width=None if self.lru_width is None else r(self.lru_width),
+            base_d_model=self.base_d_model,
+            base_d_ff=self.base_d_ff,
+            base_n_heads=self.base_n_heads,
+            base_n_kv_heads=self.base_n_kv_heads,
+            base_d_head=self.base_d_head,
+            name=f"{self.name}@{width_factor}x",
+        )
+
+    def proxy(self, width_factor: float = 0.25, min_d_head: int = 32) -> "ModelConfig":
+        """The muTransfer proxy model (Algorithm 1, step 2)."""
+        return self.scaled(width_factor, min_d_head=min_d_head)
+
+    def as_base(self) -> "ModelConfig":
+        """Re-anchor the muP base shape at this config's own widths."""
+        return self.replace(
+            base_d_model=self.d_model,
+            base_n_heads=self.n_heads,
+            base_n_kv_heads=self.n_kv_heads,
+            base_d_head=self.d_head,
+            base_d_ff=self.d_ff,
+        )
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Approximate parameter count N (for 6ND model-FLOPs accounting)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        blocks = list(self.pattern) * self.n_groups + list(self.tail)
+        glu = self.act.endswith("_glu")
+        mlp = d * f * (3 if glu else 2)
+        attn = d * (self.n_heads * self.d_head) * 2 + d * (
+            self.n_kv_heads * self.d_head
+        ) * 2
+        for b in blocks:
+            if b in ("attn", "local", "cross"):
+                total += attn + mlp
+            elif b == "dec":  # whisper decoder: self-attn + cross-attn + MLP
+                total += 2 * attn + mlp
+            elif b in ("moe", "local_moe"):
+                total += attn + self.n_experts * mlp + d * self.n_experts
+            elif b == "recurrent":
+                w = self.lru_width or d
+                total += 2 * d * w + w * d + 2 * w * (self.conv_width + 2) + mlp
+            elif b == "ssd":
+                di = self.d_inner
+                nh = self.ssm_n_heads or di // self.ssm_head_dim
+                total += d * (2 * di + 2 * self.ssm_state + nh) + di * d
+                total += self.conv_width * (di + 2 * self.ssm_state)
+            else:
+                raise ValueError(b)
+        if self.family == "encdec":
+            total += self.n_encoder_layers * (attn + mlp)
+            total += self.frontend_feat_dim * d  # stub frontend projection
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """N_active for MoE (top_k of n_experts in MoE FFNs)."""
+        if not self.n_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        glu = self.act.endswith("_glu")
+        mlp = d * f * (3 if glu else 2)
+        dense = self.param_count()
+        n_moe = sum(
+            1 for b in list(self.pattern) * self.n_groups + list(self.tail)
+            if b.endswith("moe")
+        )
+        return int(dense - n_moe * (self.n_experts - self.top_k) * mlp)

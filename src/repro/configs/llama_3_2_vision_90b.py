@@ -1,0 +1,41 @@
+"""llama-3.2-vision-90b [vlm]: 100L, d_model 8192, 64H (GQA kv=8, head_dim
+128), d_ff 28672, vocab 128256 — cross-attention image layers every 5th
+block (80 self + 20 cross = 100).  Vision tower is a STUB: input_specs()
+provides precomputed patch embeddings (1601 tokens x 1280 features).
+[hf:meta-llama/Llama-3.2-90B-Vision]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="lm",
+    n_layers=100,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=28672,
+    vocab_size=128256,
+    pattern=("attn", "attn", "attn", "attn", "cross"),
+    n_image_tokens=1601,
+    frontend_feat_dim=1280,
+    act="silu_glu",
+    tie_embeddings=False,
+    rope_theta=5e5,
+    remat="full",
+    max_seq_len=32768,
+)
+
+SMOKE = CONFIG.replace(
+    name="llama-3.2-vision-smoke",
+    n_layers=5,
+    d_model=48,
+    n_heads=4,
+    n_kv_heads=2,
+    d_head=12,
+    d_ff=96,
+    vocab_size=512,
+    n_image_tokens=16,
+    frontend_feat_dim=24,
+    remat="none",
+    max_seq_len=64,
+).as_base()

@@ -1,0 +1,39 @@
+"""whisper-small [audio]: enc-dec, 12+12L, d_model 768, 12H (kv=12, head_dim
+64), d_ff 3072, vocab 51865 — conv frontend is a STUB: input_specs() provides
+precomputed 80-dim mel-frame features; sinusoidal positions, no RoPE.
+Backbone only, per the assignment. [arXiv:2212.04356]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,                 # decoder layers; encoder below
+    n_encoder_layers=12,
+    encoder_seq=1500,
+    frontend_feat_dim=80,        # mel bins (stub frontend output)
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_head=64,
+    d_ff=3072,
+    vocab_size=51865,
+    pattern=("dec",),            # self-attn + cross-attn + MLP
+    act="gelu",
+    tie_embeddings=True,
+    rope_theta=0.0,              # sinusoidal absolute positions
+    max_seq_len=32768,
+)
+
+SMOKE = CONFIG.replace(
+    name="whisper-small-smoke",
+    n_layers=2,
+    n_encoder_layers=2,
+    encoder_seq=24,
+    d_model=48,
+    n_heads=4,
+    n_kv_heads=4,
+    d_head=12,
+    d_ff=96,
+    vocab_size=512,
+    max_seq_len=64,
+).as_base()

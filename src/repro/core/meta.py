@@ -1,0 +1,92 @@
+"""ParamMeta — static per-tensor metadata pytree, parallel to the params pytree.
+
+Every model in ``repro.models`` builds, alongside its parameter pytree, a
+*meta* pytree of identical structure whose leaves are :class:`ParamMeta`.
+The meta pytree is what makes muP compositional here: initializers
+(`core.init`), optimizers (`optim.optimizer`) and forward multipliers all
+read the same AbcRule resolved from (parametrization, InfShape, role).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.core.infshape import InfShape
+from repro.core.parametrization import (
+    AbcRule,
+    Parametrization,
+    Role,
+    abc_rule,
+    infer_role,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamMeta:
+    """Static metadata for one parameter tensor.
+
+    name:       dotted path, for logging / per-layer HP overrides.
+    infshape:   width bookkeeping (see core.infshape).
+    role:       Appendix-B class; inferred from infshape if None.
+    init:       "normal" | "zeros" | "ones"  (zeros for output/query weights
+                per App. D.2, ones for norm gains).
+    init_scale: extra per-tensor sigma factor (per-layer HP, Table 2).
+    lr_scale:   extra per-tensor LR factor (per-layer HP, Table 2).
+    sharding:   logical partition spec (tuple of logical axis names or None),
+                resolved to a mesh PartitionSpec by distributed.sharding.
+    """
+
+    name: str
+    infshape: InfShape
+    role: Optional[Role] = None
+    init: str = "normal"
+    init_scale: float = 1.0
+    lr_scale: float = 1.0
+    sharding: Any = None
+
+    def resolved_role(self) -> Role:
+        return self.role if self.role is not None else infer_role(self.infshape)
+
+    def rule(self, parametrization: Parametrization, sigma: float = 1.0) -> AbcRule:
+        return abc_rule(
+            parametrization,
+            self.infshape,
+            role=self.resolved_role(),
+            sigma=sigma * self.init_scale,
+        )
+
+
+def is_meta(x: Any) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def tree_map_with_meta(
+    fn: Callable[[Any, ParamMeta], Any], params: Any, meta: Any, *rest: Any
+) -> Any:
+    """tree_map over (params, meta, *rest) where meta leaves are ParamMeta."""
+    leaves_p, treedef = jax.tree_util.tree_flatten(params)
+    leaves_m = treedef.flatten_up_to(meta)
+    leaves_r = [treedef.flatten_up_to(r) for r in rest]
+    out = [fn(p, m, *(r[i] for r in leaves_r)) for i, (p, m) in enumerate(zip(leaves_p, leaves_m))]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def flatten_meta(meta: Any) -> Dict[str, ParamMeta]:
+    flat = {}
+
+    def rec(node, prefix):
+        if is_meta(node):
+            flat[prefix] = node
+        elif isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, f"{prefix}.{k}" if prefix else k)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, f"{prefix}.{i}" if prefix else str(i))
+        else:
+            raise TypeError(f"unexpected meta node {type(node)} at {prefix}")
+
+    rec(meta, "")
+    return flat

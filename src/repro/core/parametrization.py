@@ -1,0 +1,231 @@
+"""abc-parametrizations (Definition A.2): SP, muP (Tables 3, 8, 9), NTK.
+
+A *parametrization* is a rule mapping each parameter tensor (classified by its
+InfShape into input-like / hidden / output-like / scalar-like, Appendix B) to
+
+    a) a forward multiplier,
+    b) an initialization standard deviation,
+    c) a per-tensor learning-rate factor (separately for SGD-like and
+       Adam-like optimizers), and
+    d) a weight-decay factor.
+
+All width dependence is expressed through the *width multiplier*
+``n_tilde = fan / base_fan`` so that every rule reduces to SP at the base
+model shape (Eq. (4)) — "parametrization backward compatibility" (App. H).
+
+The default muP formulation is **Table 8** (unified vector-like rules, safe
+for tied input/output embeddings).  Tables 3 and 9 are provided for the
+Lemma J.1 equivalence tests and for users who prefer those formulations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Optional
+
+from repro.core.infshape import InfShape
+
+
+class Parametrization(str, enum.Enum):
+    SP = "sp"                   # standard parametrization (framework default)
+    MUP = "mup"                 # muP, Table 8 formulation (recommended)
+    MUP_TABLE3 = "mup_table3"   # muP, Table 3 formulation
+    MUP_TABLE9 = "mup_table9"   # muP, Table 9 (Tensor Programs IV style)
+    NTK = "ntk"                 # kernel-regime reference (SP + 1/width LR)
+
+    @property
+    def is_mup(self) -> bool:
+        return self in (
+            Parametrization.MUP,
+            Parametrization.MUP_TABLE3,
+            Parametrization.MUP_TABLE9,
+        )
+
+
+class Role(str, enum.Enum):
+    """Appendix B classification.
+
+    INPUT:  maps a finite dim to a width dim (embeddings, first projections)
+            — includes all biases and norm gains (App. B: "input weights &
+            all biases"; a norm gain is an input weight with input 1).
+    HIDDEN: width -> width (matrix-like).
+    OUTPUT: width -> finite (readout / unembedding / MoE router).
+    SCALAR: no width dims (positional bias, learnable temperature, ...).
+    """
+
+    INPUT = "input"
+    HIDDEN = "hidden"
+    OUTPUT = "output"
+    SCALAR = "scalar"
+
+
+def infer_role(infshape: InfShape) -> Role:
+    fi, fo = infshape.fan_in_is_width(), infshape.fan_out_is_width()
+    if fi and fo:
+        return Role.HIDDEN
+    if fo:
+        return Role.INPUT
+    if fi:
+        return Role.OUTPUT
+    return Role.SCALAR
+
+
+@dataclasses.dataclass(frozen=True)
+class AbcRule:
+    """Resolved (multiplier, init std, lr mults, wd mult) for one tensor."""
+
+    multiplier: float      # forward parameter multiplier (Definition A.1)
+    init_std: float        # absolute std for initialization
+    sgd_lr_mult: float     # per-tensor LR factor under SGD(+momentum)
+    adam_lr_mult: float    # per-tensor LR factor under Adam/AdamW/Adagrad/...
+    wd_mult: float = 1.0   # weight-decay factor (AdamW: width-independent)
+
+    def lr_mult(self, adam_like: bool) -> float:
+        return self.adam_lr_mult if adam_like else self.sgd_lr_mult
+
+
+def abc_rule(
+    parametrization: Parametrization,
+    infshape: InfShape,
+    role: Optional[Role] = None,
+    sigma: float = 1.0,
+) -> AbcRule:
+    """Compute the abc-rule for one tensor.
+
+    sigma: the tunable base init scale (a muTransferable HP, Table 2); the
+    returned ``init_std`` already folds in the fan and width scaling.
+
+    Width factors (all equal 1 at the base shape):
+      nt_in  = fan_in / base_fan_in   (if fan_in is a width dim)
+      nt_out = fan_out / base_fan_out (if fan_out is a width dim)
+    """
+    role = role or infer_role(infshape)
+    fan_in = max(infshape.fan_in, 1)
+    nt_in = infshape.width_mult
+    nt_out = infshape.fan_out_mult
+    p = parametrization
+
+    if role == Role.SCALAR:
+        # scalar-like: everything constant in width (App. B.2)
+        return AbcRule(1.0, sigma, 1.0, 1.0, 1.0)
+
+    if p == Parametrization.SP:
+        return AbcRule(1.0, sigma / math.sqrt(fan_in), 1.0, 1.0, 1.0)
+
+    if p == Parametrization.NTK:
+        # kernel-regime reference: SP init, LR scaled down by width for
+        # width-fan-in tensors (footnote 4 / Sec. 10.4). Not for production.
+        lr = 1.0 / nt_in if role in (Role.HIDDEN, Role.OUTPUT) else 1.0
+        return AbcRule(1.0, sigma / math.sqrt(fan_in), lr, lr, 1.0)
+
+    if p == Parametrization.MUP:  # Table 8
+        if role == Role.INPUT:
+            return AbcRule(
+                multiplier=1.0,
+                init_std=sigma / math.sqrt(fan_in),
+                sgd_lr_mult=nt_out,
+                adam_lr_mult=1.0,
+            )
+        if role == Role.HIDDEN:
+            return AbcRule(
+                multiplier=1.0,
+                init_std=sigma / math.sqrt(fan_in),
+                sgd_lr_mult=1.0,
+                adam_lr_mult=1.0 / nt_in,
+            )
+        # OUTPUT: init var constant in width (== SP at base), forward
+        # multiplier 1/nt_in, SGD LR * nt_in  (Table 8 with base factors)
+        return AbcRule(
+            multiplier=1.0 / nt_in,
+            init_std=sigma / math.sqrt(infshape.base_fan_in),
+            sgd_lr_mult=nt_in,
+            adam_lr_mult=1.0,
+        )
+
+    if p == Parametrization.MUP_TABLE3:
+        if role == Role.INPUT:
+            return AbcRule(1.0, sigma / math.sqrt(fan_in), nt_out, 1.0)
+        if role == Role.HIDDEN:
+            return AbcRule(1.0, sigma / math.sqrt(fan_in), 1.0, 1.0 / nt_in)
+        # OUTPUT: init var 1/(fan_in * nt_in); LR 1/nt_in for both
+        return AbcRule(
+            multiplier=1.0,
+            init_std=sigma / math.sqrt(fan_in * nt_in),
+            sgd_lr_mult=1.0 / nt_in,
+            adam_lr_mult=1.0 / nt_in,
+        )
+
+    if p == Parametrization.MUP_TABLE9:
+        if role == Role.INPUT:
+            # Lemma J.1 applied to Table 3 input rules with theta=sqrt(nt_out)
+            return AbcRule(
+                multiplier=math.sqrt(nt_out),
+                init_std=sigma / math.sqrt(fan_in * nt_out),
+                sgd_lr_mult=1.0,
+                adam_lr_mult=1.0 / math.sqrt(nt_out),
+            )
+        if role == Role.HIDDEN:
+            return AbcRule(1.0, sigma / math.sqrt(fan_in), 1.0, 1.0 / nt_in)
+        # OUTPUT via theta = 1/sqrt(nt_in)
+        return AbcRule(
+            multiplier=1.0 / math.sqrt(nt_in),
+            init_std=sigma / math.sqrt(fan_in),
+            sgd_lr_mult=1.0,
+            adam_lr_mult=1.0 / math.sqrt(nt_in),
+        )
+
+    raise ValueError(f"unknown parametrization {parametrization!r}")
+
+
+def lemma_j1_rescale(rule: AbcRule, theta: float, adam_like: bool) -> AbcRule:
+    """Lemma J.1: (A, B, C) -> (A*theta, B/theta, C/theta^2 [SGD] or C/theta
+    [Adam]) leaves the training trajectory invariant.  Used by the
+    equivalence tests."""
+    if adam_like:
+        return AbcRule(
+            rule.multiplier * theta,
+            rule.init_std / theta,
+            rule.sgd_lr_mult,          # untouched in adam mode
+            rule.adam_lr_mult / theta,
+            rule.wd_mult,
+        )
+    return AbcRule(
+        rule.multiplier * theta,
+        rule.init_std / theta,
+        rule.sgd_lr_mult / (theta * theta),
+        rule.adam_lr_mult,
+        rule.wd_mult,
+    )
+
+
+def attention_scale(
+    parametrization: Parametrization,
+    d_head: int,
+    base_d_head: int,
+    alpha_attn: float = 1.0,
+) -> float:
+    """Attention logit scale (Definition 4.1 + App. B.1).
+
+    muP: 1/d attention with base compatibility —
+         alpha_attn * sqrt(base_d_head) / d_head
+         (== alpha_attn / sqrt(d_head) at the base shape).
+    SP/NTK: alpha_attn / sqrt(d_head).
+    """
+    if parametrization.is_mup:
+        return alpha_attn * math.sqrt(base_d_head) / d_head
+    return alpha_attn / math.sqrt(d_head)
+
+
+def output_logit_mult(
+    parametrization: Parametrization,
+    width_mult: float,
+    alpha_output: float = 1.0,
+) -> float:
+    """Multiplier for readout logits: alpha_output / nt (muP Table 8) or
+    alpha_output (SP).  For Table 3/9 the factor already lives in AbcRule's
+    multiplier/init, so callers must use `abc_rule(...).multiplier` instead;
+    this helper is the Table-8 fast path used by MuReadout."""
+    if parametrization == Parametrization.MUP:
+        return alpha_output / width_mult
+    return alpha_output

@@ -1,0 +1,112 @@
+"""muTransfer (Algorithm 1): tune on a proxy, zero-shot copy to the target.
+
+    1. Parametrize the target model in muP  -> cfg (base shape = proxy-or-own)
+    2. Tune a smaller version               -> tune(proxy_cfg, ...)
+    3. Copy tuned HPs to the target         -> transfer(hps, target_cfg)
+
+Step 3 is *literally a copy* for the muTransferable set (Table 1/2) — that
+is the paper's point — but this module makes the HP taxonomy explicit and
+loudly rejects transferring regularization HPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Dict, Optional
+
+from repro.configs.base import ModelConfig
+
+# Table 1 taxonomy ----------------------------------------------------------
+MU_TRANSFERABLE = {
+    # optimization
+    "lr", "momentum", "b1", "b2", "schedule", "warmup_steps",
+    # init
+    "sigma",
+    # parameter multipliers
+    "alpha_output", "alpha_attn", "alpha_embed",
+    # per-layer LR scales
+    "lr_embed",
+}
+NOT_TRANSFERABLE = {"dropout", "weight_decay", "label_smoothing"}
+TRANSFERRED_ACROSS = {"width", "depth", "batch_size", "seq_len", "train_steps"}
+
+
+@dataclasses.dataclass(frozen=True)
+class HParams:
+    """The muTransferable HP bundle swept in tuning (paper's Table 2 set)."""
+
+    lr: float = 1e-2
+    sigma: float = 1.0
+    alpha_output: float = 1.0
+    alpha_attn: float = 1.0
+    alpha_embed: float = 1.0
+    lr_embed: Optional[float] = None      # per-layer LR (App. D.7)
+    schedule: str = "constant"
+    warmup_steps: int = 0
+    b1: float = 0.9
+    b2: float = 0.999
+    # NOT muTransferable — kept so callers see them rejected explicitly
+    weight_decay: float = 0.0
+    dropout: float = 0.0
+
+    def replace(self, **kw) -> "HParams":
+        return dataclasses.replace(self, **kw)
+
+
+def make_proxy(
+    target: ModelConfig, width_factor: float = 0.25, depth: Optional[int] = None,
+    min_d_head: int = 32,
+) -> ModelConfig:
+    """Algorithm 1 step 2's model: shrink width (and optionally depth) while
+    keeping the muP base shape — so HPs found on it are the target's HPs.
+
+    Keeps d_head >= min_d_head (App. D.4: small d_k makes the proxy's HP
+    landscape noisy) via ModelConfig.scaled.
+    """
+    proxy = target.scaled(width_factor, min_d_head=min_d_head)
+    if depth is not None:
+        # depth transfer (Sec. 6.1): reduce n_groups, keep the pattern
+        per = len(target.pattern)
+        n_groups = max(depth // per, 1)
+        proxy = proxy.replace(
+            n_layers=n_groups * per + len(target.tail),
+            name=f"{proxy.name}@L{depth}",
+        )
+    return proxy
+
+
+def transfer(hps: HParams, target: ModelConfig) -> Dict[str, Any]:
+    """Zero-shot transfer: returns (model overrides, optimizer kwargs) to run
+    the *target* with the proxy-tuned HPs.  Pure copy for the transferable
+    set; regularization HPs are refused (Table 1)."""
+    if hps.weight_decay or hps.dropout:
+        warnings.warn(
+            "weight_decay/dropout are regularization HPs and are NOT "
+            "muTransferable (Table 1); they will not be copied — retune "
+            "them at target scale.",
+            stacklevel=2,
+        )
+    model_overrides = dict(
+        sigma=hps.sigma,
+        alpha_output=hps.alpha_output,
+        alpha_attn=hps.alpha_attn,
+        alpha_embed=hps.alpha_embed,
+    )
+    optim_kwargs = dict(lr=hps.lr, b1=hps.b1, b2=hps.b2)
+    return {
+        "model": model_overrides,
+        "optim": optim_kwargs,
+        "schedule": {"name": hps.schedule, "warmup_steps": hps.warmup_steps},
+    }
+
+
+def reverse_transfer(hps: HParams, wide_cfg: ModelConfig, narrow_width: int):
+    """Reverse-muTransfer (App. I): replicate a large model's (in)stability
+    on a small model by simulating the wide width via the base shape.
+
+    Returns a narrow config whose *base* shape is the wide model — training
+    it reproduces the wide model's effective HPs ("simulated width")."""
+    factor = narrow_width / wide_cfg.d_model
+    narrow = wide_cfg.scaled(factor)
+    # keep base anchored at the wide model => same effective parametrization
+    return narrow.replace(name=f"{wide_cfg.name}@simwidth{wide_cfg.d_model}")

@@ -1,0 +1,117 @@
+"""HP search on the proxy model (Sec. 7 methodology).
+
+Random search over log-uniform/grid spaces, selecting by *training loss*
+(App. A: "using training loss as the metric can be more robust to seed than
+validation loss").  The searcher is deliberately simple — the paper's claim
+is that *any* tuner pointed at the proxy works; Bayesian tuners etc. are
+complementary (Sec. 10.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.transfer import HParams
+from repro.data.pipeline import make_pipeline
+from repro.models.model import build_model
+from repro.optim.optimizer import Optimizer, apply_updates
+from repro.optim import schedules as sched_lib
+
+
+@dataclasses.dataclass
+class SearchSpace:
+    """Log2 grids in the style of App. F.1/F.3."""
+
+    lr: Sequence[float] = tuple(5e-3 * 2.0**z for z in np.arange(-3, 3.5, 0.5))
+    sigma: Sequence[float] = tuple(2.0**z for z in range(-3, 3))
+    alpha_output: Sequence[float] = tuple(2.0**z for z in range(-4, 5, 2))
+    alpha_attn: Sequence[float] = tuple(2.0**z for z in range(-2, 5, 2))
+    alpha_embed: Sequence[float] = (1.0, 3.16, 10.0)
+
+    def sample(self, rng: np.random.RandomState) -> HParams:
+        pick = lambda xs: float(xs[rng.randint(len(xs))])
+        return HParams(
+            lr=pick(self.lr),
+            sigma=pick(self.sigma),
+            alpha_output=pick(self.alpha_output),
+            alpha_attn=pick(self.alpha_attn),
+            alpha_embed=pick(self.alpha_embed),
+        )
+
+
+def train_proxy(
+    cfg,
+    hps: HParams,
+    steps: int = 50,
+    batch_size: int = 16,
+    seq_len: int = 64,
+    seed: int = 0,
+    optimizer: str = "adamw",
+) -> float:
+    """Train the proxy briefly; return final train loss (the tuning metric)."""
+    cfg = cfg.replace(
+        sigma=hps.sigma,
+        alpha_output=hps.alpha_output,
+        alpha_attn=hps.alpha_attn,
+        alpha_embed=hps.alpha_embed,
+        dtype="float32",
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    schedule = sched_lib.make_schedule("constant")
+    opt = Optimizer.create(
+        optimizer, lr=hps.lr, parametrization=model.p13n, meta=model.meta,
+        b1=hps.b1, b2=hps.b2, schedule=schedule,
+    )
+    opt_state = opt.init(params)
+    pipe = make_pipeline(cfg.vocab_size, seq_len, batch_size, seed=seed)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    loss = float("nan")
+    ema = None
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        lf = float(loss)
+        if math.isnan(lf) or math.isinf(lf):
+            return float("inf")  # diverged — worst possible score
+        ema = lf if ema is None else 0.7 * ema + 0.3 * lf
+    return ema if ema is not None else float("inf")
+
+
+def random_search(
+    proxy_cfg,
+    n_samples: int = 16,
+    space: Optional[SearchSpace] = None,
+    steps: int = 50,
+    batch_size: int = 16,
+    seq_len: int = 64,
+    seed: int = 0,
+    eval_fn: Optional[Callable[[HParams], float]] = None,
+) -> Tuple[HParams, List[Tuple[HParams, float]]]:
+    """Random HP search on the proxy (Sec. 7.1).  Returns (best, trials)."""
+    space = space or SearchSpace()
+    rng = np.random.RandomState(seed)
+    trials: List[Tuple[HParams, float]] = []
+    for i in range(n_samples):
+        hps = space.sample(rng)
+        if eval_fn is not None:
+            score = eval_fn(hps)
+        else:
+            score = train_proxy(
+                proxy_cfg, hps, steps=steps, batch_size=batch_size,
+                seq_len=seq_len, seed=seed + i,
+            )
+        trials.append((hps, score))
+    best = min(trials, key=lambda t: t[1])[0]
+    return best, trials

@@ -1,0 +1,221 @@
+"""Logical-axis sharding: how every tensor maps onto the production mesh.
+
+Models annotate tensors with *logical* axis names ("batch", "heads", "ffn",
+"vocab", "experts", "kv_seq", "fsdp", ...).  A :class:`ShardingRules` object
+— built per (config, mesh, shape-kind) by :func:`make_rules` — resolves
+logical names to mesh axes, with automatic divisibility fallbacks (e.g.
+smollm's 15 query heads cannot shard over a 16-way model axis, so the rule
+degrades to replication for that tensor while d_ff still shards).
+
+Inside ``with shardings(mesh, rules):`` the :func:`shard` helper applies
+``with_sharding_constraint``; outside any context it is the identity, so the
+same model code runs on a laptop CPU and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis name -> mesh axis (or tuple of mesh axes, or None)."""
+
+    rules: Dict[str, MeshAxes]
+
+    def resolve(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        if logical not in self.rules:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        return self.rules[logical]
+
+
+def mesh_axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def logical_to_spec(
+    mesh: Mesh,
+    rules: ShardingRules,
+    logical_axes: Sequence[Optional[str]],
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Resolve logical axes to a PartitionSpec, dropping non-divisible axes."""
+    entries = []
+    used: set = set()
+    for i, name in enumerate(logical_axes):
+        axes = rules.resolve(name)
+        ax_tuple: Tuple[str, ...] = ()
+        if axes is not None:
+            ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+            # a mesh axis may appear at most once in a PartitionSpec
+            ax_tuple = tuple(a for a in ax_tuple if a not in used)
+        if shape is not None:
+            # progressive divisibility fallback: drop trailing mesh axes
+            # until the dim divides (e.g. batch 32 on ("data","model")=256
+            # falls back to 16-way "data" instead of full replication)
+            while ax_tuple and shape[i] % mesh_axis_size(mesh, ax_tuple) != 0:
+                ax_tuple = ax_tuple[:-1]
+        axes = (
+            ax_tuple if len(ax_tuple) > 1
+            else (ax_tuple[0] if ax_tuple else None)
+        )
+        if axes is not None:
+            for a in (axes,) if isinstance(axes, str) else axes:
+                used.add(a)
+        entries.append(axes)
+    return P(*entries)
+
+
+@contextlib.contextmanager
+def shardings(mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current_context() -> Optional[Tuple[Mesh, ShardingRules]]:
+    return getattr(_STATE, "ctx", None)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain `x`'s sharding; identity when no sharding context is set."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard(): {len(logical_axes)} axes for {x.ndim}-d array {x.shape}"
+        )
+    spec = logical_to_spec(mesh, rules, logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, rules: ShardingRules, logical_axes, shape=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, rules, logical_axes, shape))
+
+
+# ---------------------------------------------------------------------------
+# Rule construction
+# ---------------------------------------------------------------------------
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    cfg=None,
+    fsdp: bool = True,
+    shard_kv_seq: bool = False,
+    kind: str = "train",
+) -> ShardingRules:
+    """Standard rule set for the (pod?, data, model) production mesh.
+
+    - batch over (pod, data) — pure DP across pods.
+    - TP over "model" for heads / ffn / vocab / experts (EP shares the axis).
+    - fsdp: weights additionally sharded over "data" on their non-TP dim
+      (ZeRO-3 style; XLA inserts all-gather/reduce-scatter pairs).
+    - shard_kv_seq: shard KV-cache sequence dim over "data" — used for
+      long-context decode where batch (=1) cannot use the data axis.
+    - cfg-aware fallbacks: when an arch's head counts don't divide the model
+      axis (smollm's 15 heads, llama4's 40, GQA kv=8 on 16-way TP), the
+      rule set shifts TP onto head_dim so attention state still shards.
+    """
+    axis_names = mesh.axis_names
+    has_pod = "pod" in axis_names
+    batch_axes: MeshAxes = ("pod", "data") if has_pod else ("data",)
+    model_size = mesh.shape["model"]
+
+    # per-arch parallelism policy: sub-1B models waste a 16-way TP axis —
+    # pure ZeRO-DP over the whole chip grid instead (§Perf: -94% dominant
+    # roofline term for smollm-360m/train_4k).
+    if cfg is not None and getattr(cfg, "parallelism", "tp") == "dp":
+        dp_all: MeshAxes = ("pod", "data", "model") if has_pod else ("data", "model")
+        rules: Dict[str, MeshAxes] = {
+            "batch": dp_all, "attn_batch": dp_all, "seq": None,
+            "kv_seq": None, "embed": None,
+            "heads": None, "kv_heads": None, "head_dim": None,
+            "ffn": None, "vocab": None, "experts": None,
+            "expert_capacity": None,
+            "fsdp": dp_all if fsdp else None,
+            "w_fsdp": dp_all if fsdp else None,
+            "layers": None, "ssm_state": None, "conv_width": None,
+            "image": None, "frames": None,
+        }
+        return ShardingRules(rules=rules)
+
+    heads_ax: MeshAxes = "model"
+    kv_heads_ax: MeshAxes = "model"
+    head_dim_ax: MeshAxes = None
+    if cfg is not None:
+        if cfg.n_heads % model_size != 0:
+            heads_ax = None
+        if cfg.n_kv_heads % model_size != 0:
+            kv_heads_ax = None
+        if (
+            kind == "decode"
+            and (kv_heads_ax is None or heads_ax is None)
+            and cfg.d_head % model_size == 0
+        ):
+            # decode only: shard the KV cache's head_dim so big caches fit.
+            # NEVER in training/prefill — head_dim is the QK^T contraction
+            # dim, and TP'ing it makes SPMD all-gather K/V to the global
+            # batch in f32 (§Perf mixtral iteration 3: -16% from this fix).
+            head_dim_ax = "model"
+
+    # when q-heads cannot shard over the model axis (gemma2-2b's 8 heads,
+    # whisper's 12, llama4's 40 on 16-way TP), attention would be fully
+    # REPLICATED across it; instead shard the attention *batch* over the
+    # otherwise-idle model axis (progressive fallback trims it when the
+    # batch doesn't divide).
+    attn_batch: MeshAxes = (
+        batch_axes + ("model",) if heads_ax is None else batch_axes
+    )
+
+    rules: Dict[str, MeshAxes] = {
+        "batch": batch_axes,
+        "attn_batch": attn_batch,
+        "seq": None,
+        "kv_seq": "data" if shard_kv_seq else None,
+        "embed": None,          # activation d_model dim: replicated
+        "heads": heads_ax,
+        "kv_heads": kv_heads_ax,
+        "head_dim": head_dim_ax,
+        # FSDP lives on the ffn (output) dim of MLP/MoE weights, NOT on the
+        # contraction dim: avoids SPMD collective-permute resharding of
+        # x @ w_in (§Perf gemma2 iteration 5: -14% memory term).
+        "ffn": ("model", "data") if fsdp else "model",
+        # weight-only FSDP axis: rides on *output* dims (head_dim of qkv,
+        # d_model of wo) so no contraction dim is ever data-sharded
+        "w_fsdp": "data" if fsdp else None,
+        "vocab": ("model", "data") if fsdp else "model",
+        "experts": "model",
+        "expert_capacity": None,
+        "fsdp": "data" if fsdp else None,
+        "layers": None,         # stacked-scan leading dim
+        "ssm_state": None,
+        "conv_width": None,
+        "image": None,
+        "frames": None,
+    }
+    return ShardingRules(rules=rules)

@@ -1,0 +1,66 @@
+"""jit'd wrappers with TPU/interpret/reference dispatch.
+
+The model code calls these; on TPU they run the Pallas kernels, on CPU they
+either interpret the kernel (tests) or fall back to the jnp reference
+(everything else, incl. the dry-run, which lowers pure XLA).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref
+from repro.kernels import rmsnorm as rn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "scale", "causal", "window", "softcap", "block_q", "block_k", "impl",
+    ),
+)
+def attention(
+    q, k, v, *, scale: float, causal: bool = True, window: int = 0,
+    softcap: float = 0.0, block_q: int = 128, block_k: int = 128,
+    impl: str = "auto",
+):
+    """impl: "auto" (pallas on TPU, ref elsewhere), "pallas", "interpret",
+    "ref"."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.attention_ref(
+            q, k, v, scale=scale, causal=causal, window=window, softcap=softcap
+        )
+    S, T = q.shape[1], k.shape[1]
+    bq, bk = min(block_q, S), min(block_k, T)
+    if S % bq or T % bk:
+        # non-tileable shapes: reference path
+        return ref.attention_ref(
+            q, k, v, scale=scale, causal=causal, window=window, softcap=softcap
+        )
+    return fa.flash_attention(
+        q, k, v, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, interpret=(impl == "interpret"),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "impl"))
+def fused_rmsnorm(x, gain, *, eps: float = 1e-6, block_rows: int = 256,
+                  impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return ref.rmsnorm_ref(x, gain, eps)
+    return rn.rmsnorm(
+        x, gain, eps=eps, block_rows=block_rows,
+        interpret=(impl == "interpret"),
+    )

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Deliberately written as straight-line jnp (no tiling, no online softmax) so
+they are independently-auditable references for tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def attention_ref(
+    q: jax.Array,          # (B, S, H, d)
+    k: jax.Array,          # (B, T, K, d)
+    v: jax.Array,          # (B, T, K, d)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    B, S, H, d = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, kf) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_idx = jnp.arange(S)[:, None]
+    k_idx = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window:
+        mask &= (q_idx - k_idx) < window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, vf)
+    return out.reshape(B, S, H, d).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gain.astype(jnp.float32))
+    return y.astype(x.dtype)

@@ -1,0 +1,332 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST run before any jax import: device count is locked at first init.
+#   Set ONLY here — smoke tests and benches must see the real device count.
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) cell:
+    lower + compile train_step / serve_step against ShapeDtypeStruct inputs
+    on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, then record
+    memory_analysis(), cost_analysis() and the HLO collective byte census
+    that feeds EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single --out experiments/dryrun
+"""
+import argparse
+import gzip
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed.sharding import make_rules, shardings as sharding_ctx
+from repro.launch import specs as specs_lib
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.optim.optimizer import Optimizer
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\w[\w\d\[\],{}<>\. ]*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _parse_result_bytes(result_type: str) -> int:
+    """Sum bytes over (possibly tuple) HLO result types like
+    'bf16[128,4096]' or '(f32[8,16], f32[8,16])'."""
+    total = 0
+    for m in SHAPE_RE.finditer(result_type):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_census(hlo_text: str) -> Dict[str, int]:
+    """Bytes by collective kind, from the compiled (post-SPMD) HLO.
+
+    Convention: we count *result* bytes per op; a ring all-reduce moves
+    ~2x its buffer so it is weighted x2 (documented in EXPERIMENTS.md).
+    """
+    out: Dict[str, int] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        result_type, kind = m.group(1), m.group(2)
+        nbytes = _parse_result_bytes(result_type)
+        if kind == "all-reduce":
+            nbytes *= 2
+        out[kind] = out.get(kind, 0) + nbytes
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def _compile_once(cfg, shape: str, mesh, fsdp: bool, rules_patch=None):
+    """Lower + compile one (config, shape) on `mesh`; returns compiled."""
+    model = build_model(cfg)
+    spec_kind = specs_lib.SHAPES[shape].kind
+    rules = make_rules(
+        mesh, cfg=cfg, fsdp=fsdp, shard_kv_seq=(shape == "long_500k"),
+        kind=spec_kind,
+    )
+    if rules_patch:
+        patched = dict(rules.rules)
+        patched.update(rules_patch)
+        rules = type(rules)(rules=patched)
+    spec = specs_lib.SHAPES[shape]
+    p_structs = steps_lib.param_structs(model.meta)
+    p_sh = steps_lib.param_shardings(mesh, rules, model.meta)
+    replicated = NamedSharding(mesh, P())
+    in_structs = specs_lib.input_specs(cfg, shape, model)
+    in_axes = specs_lib.input_axes(cfg, shape, model)
+    in_sh = steps_lib.tree_shardings(mesh, rules, in_axes, in_structs)
+
+    with sharding_ctx(mesh, rules):
+        if spec.kind == "train":
+            opt = Optimizer.create(
+                "adamw", lr=1e-3, parametrization=model.p13n, meta=model.meta,
+                weight_decay=0.1,
+            )
+            step_fn = steps_lib.make_train_step(model, opt)
+            o_structs = steps_lib.opt_state_structs(opt, p_structs)
+            o_sh = steps_lib.opt_state_shardings(
+                mesh, rules, model.meta, opt, replicated
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, o_sh, in_sh),
+                out_shardings=(p_sh, o_sh, replicated),
+            )
+            lowered = jitted.lower(p_structs, o_structs, in_structs)
+        elif spec.kind == "prefill":
+            step_fn = steps_lib.make_prefill_step(model)
+            jitted = jax.jit(step_fn, in_shardings=(p_sh, in_sh))
+            lowered = jitted.lower(p_structs, in_structs)
+        else:  # decode
+            step_fn = steps_lib.make_serve_step(model)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_sh, in_sh),
+                out_shardings=(replicated, in_sh["cache"]),
+            )
+            lowered = jitted.lower(p_structs, in_structs)
+        return lowered.compile()
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = collective_census(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": float(coll.get("total", 0)),
+        "collectives": coll,
+    }
+
+
+def _unrolled_variant(cfg, n_groups: int):
+    """Same widths, `n_groups` repeats of the pattern, python-unrolled."""
+    kw = dict(
+        n_layers=len(cfg.pattern) * n_groups + len(cfg.tail),
+        scan_layers=False,
+        name=f"{cfg.name}@G{n_groups}",
+    )
+    if cfg.family == "encdec":
+        kw["n_encoder_layers"] = n_groups
+    return cfg.replace(**kw)
+
+
+def costed_terms(cfg, shape: str, mesh, fsdp: bool, rules_patch=None) -> Dict[str, Any]:
+    """Scan-trip-corrected per-device cost terms.
+
+    XLA's cost_analysis counts while-loop (scan) bodies ONCE, so the real
+    compile under-reports FLOPs/bytes/collectives by ~n_groups x.  We compile
+    two small *unrolled* variants (1 and 2 groups; identical widths, remat,
+    shardings) and extrapolate:  X_total = X(1) + (G-1) * (X(2) - X(1)).
+    For whisper the encoder stack scales with the same multiplier (12 enc =
+    12 dec groups), so one correction covers both stacks.
+    """
+    g1 = _compile_once(_unrolled_variant(cfg, 1), shape, mesh, fsdp, rules_patch)
+    c1 = _cost_of(g1)
+    g2 = _compile_once(_unrolled_variant(cfg, 2), shape, mesh, fsdp, rules_patch)
+    c2 = _cost_of(g2)
+    G = cfg.n_groups
+    out = {}
+    for key in ("flops", "bytes", "collective_bytes"):
+        body = max(c2[key] - c1[key], 0.0)
+        out[key] = c1[key] + (G - 1) * body
+        out[f"{key}_per_group"] = body
+    out["collectives_g1"] = c1["collectives"]
+    out["collectives_g2"] = c2["collectives"]
+    return out
+
+
+def lower_cell(
+    arch: str,
+    shape: str,
+    multi_pod: bool,
+    fsdp: bool = True,
+    remat: Optional[str] = None,
+    save_hlo: Optional[str] = None,
+    extra_overrides: Optional[Dict[str, Any]] = None,
+    with_costing: bool = True,
+    rules_patch: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; returns the record for the roofline table."""
+    t0 = time.time()
+    skip = specs_lib.cell_is_skipped(arch, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "skipped": skip}
+
+    overrides = dict(extra_overrides or {})
+    if remat is not None:
+        overrides["remat"] = remat
+    cfg = get_config(arch, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = specs_lib.SHAPES[shape]
+
+    compiled = _compile_once(cfg, shape, mesh, fsdp, rules_patch)
+    t_compile = time.time() - t0
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": spec.kind,
+        "fsdp": fsdp,
+        "remat": cfg.remat,
+        "compile_s": round(t_compile, 1),
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+    }
+
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        record["flops"] = float(cost.get("flops", 0.0))
+        record["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        record["cost_error"] = repr(e)
+
+    try:
+        mem = compiled.memory_analysis()
+        record["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover
+        record["memory_error"] = repr(e)
+
+    try:
+        hlo = compiled.as_text()
+        record["collectives"] = collective_census(hlo)
+        record["hlo_lines"] = hlo.count("\n")
+        if save_hlo:
+            os.makedirs(save_hlo, exist_ok=True)
+            fname = os.path.join(
+                save_hlo, f"{arch}_{shape}_{record['mesh']}.hlo.gz"
+            )
+            with gzip.open(fname, "wt") as f:
+                f.write(hlo)
+    except Exception as e:  # pragma: no cover
+        record["hlo_error"] = repr(e)
+
+    # scan-trip-corrected cost terms (single-pod only: the roofline table)
+    if with_costing and not multi_pod:
+        try:
+            record["costed"] = costed_terms(cfg, shape, mesh, fsdp, rules_patch)
+        except Exception as e:  # pragma: no cover
+            record["costing_error"] = repr(e)
+            record["costing_traceback"] = traceback.format_exc()
+
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(specs_lib.SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    archs = (
+        [a for a in list_archs() if a != "mup-gpt"] if args.all or not args.arch
+        else [args.arch]
+    )
+    shapes = list(specs_lib.SHAPES) if not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape}_{'multi' if multi else 'single'}"
+                try:
+                    rec = lower_cell(
+                        arch, shape, multi, fsdp=not args.no_fsdp,
+                        remat=args.remat, save_hlo=args.save_hlo,
+                    )
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if multi else "16x16",
+                        "error": repr(e),
+                        "traceback": traceback.format_exc(),
+                    }
+                    failures += 1
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2)
+                status = (
+                    "SKIP" if rec.get("skipped")
+                    else ("FAIL" if rec.get("error") else "OK")
+                )
+                print(
+                    f"[{status}] {tag} "
+                    f"flops={rec.get('flops', '-')} "
+                    f"coll={rec.get('collectives', {}).get('total', '-')} "
+                    f"compile={rec.get('compile_s', '-')}s",
+                    flush=True,
+                )
+                if rec.get("error"):
+                    print(rec["traceback"], flush=True)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

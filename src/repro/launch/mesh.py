@@ -1,0 +1,31 @@
+"""Production meshes.  Functions only — importing this module never touches
+jax device state (device count is locked at first jax init, and the dry-run
+must set XLA_FLAGS before that happens)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model) — the 'pod' axis
+    is pure DP across pods (cross-pod traffic = one gradient reduction)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host has — for smoke tests and examples (1 CPU here)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
+    """Rebuild a (data, model) mesh from a surviving device count — the
+    elastic-restart path: after node loss, data parallelism shrinks while
+    model parallelism (intra-replica) is preserved."""
+    while model_parallel > 1 and n_devices % model_parallel != 0:
+        model_parallel //= 2
+    data = n_devices // model_parallel
+    return jax.make_mesh((data, model_parallel), ("data", "model"))

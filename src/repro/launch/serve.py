@@ -1,0 +1,105 @@
+"""Batched serving driver: prefill a batch of prompts, then decode N tokens.
+
+Demonstrates the inference path end-to-end on real devices (CPU here, same
+code on the production mesh), with greedy/temperature sampling and
+per-sequence positions.
+
+Usage:
+    python -m repro.launch.serve --arch smollm-135m --smoke \
+        --batch 4 --prompt-len 32 --gen-len 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.distributed.sharding import make_rules, shardings as sharding_ctx
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import build_model
+
+
+def generate(
+    model, params, prompts: jax.Array, gen_len: int,
+    memory_inputs=None, temperature: float = 0.0, seed: int = 0,
+):
+    """prompts (B, P) -> generated tokens (B, gen_len)."""
+    B, P = prompts.shape
+    cache_len = P + gen_len
+    last_logits, cache = model.prefill(
+        params, prompts, memory_inputs=memory_inputs, cache_len=cache_len
+    )
+
+    def sample(logits, key):
+        if temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+    decode = jax.jit(model.decode_step)
+
+    key = jax.random.PRNGKey(seed)
+    tok = sample(last_logits, key)[:, None]                    # (B,1)
+    out = [tok]
+    for i in range(gen_len - 1):
+        pos = jnp.full((B, 1), P + i, jnp.int32)
+        logits, cache = decode(params, tok, pos, cache)
+        key, sub = jax.random.split(key)
+        tok = sample(logits[:, 0], sub)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = cfg.replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+
+    mesh = make_host_mesh()
+    rules = make_rules(mesh, cfg=cfg, fsdp=False)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(args.seed + 1),
+        (args.batch, args.prompt_len), 0, cfg.vocab_size,
+    )
+    mem = {}
+    if cfg.n_image_tokens:
+        mem["images"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.n_image_tokens, cfg.frontend_feat_dim),
+        )
+    if cfg.family == "encdec":
+        mem["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (args.batch, cfg.encoder_seq, cfg.frontend_feat_dim),
+        )
+
+    t0 = time.time()
+    with sharding_ctx(mesh, rules):
+        toks = generate(
+            model, params, prompts, args.gen_len,
+            memory_inputs=mem or None, temperature=args.temperature,
+            seed=args.seed,
+        )
+    dt = time.time() - t0
+    n_tok = args.batch * args.gen_len
+    print(f"[serve] generated {toks.shape} in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s)")
+    print(toks[:, :16])
+    return toks
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+train_step/serve_step against these for every (arch x shape) cell.
+
+Assigned shape set (LM family):
+    train_4k     seq 4096,   global batch 256   (training)
+    prefill_32k  seq 32768,  global batch 32    (inference prefill)
+    decode_32k   cache 32768, global batch 128  (one-token decode)
+    long_500k    cache 524288, global batch 1   (long-context decode)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+# long_500k is only meaningful for sub-quadratic / windowed archs
+# (DESIGN.md §Shape/legs skipped); pure full-attention archs skip it.
+LONG_CONTEXT_OK = {
+    "mamba2-130m",
+    "recurrentgemma-9b",
+    "mixtral-8x22b",
+    "llama4-scout-17b-a16e",
+    "gemma2-27b",
+    "gemma2-2b",
+}
+SKIPPED_CELLS = {
+    ("smollm-360m", "long_500k"): "pure full attention — no windowing in arch",
+    ("smollm-135m", "long_500k"): "pure full attention — no windowing in arch",
+    ("whisper-small", "long_500k"): "enc-dec; 500k decode out of family",
+    ("llama-3.2-vision-90b", "long_500k"): "pure full self+cross attention",
+}
+
+
+def cell_is_skipped(arch: str, shape: str) -> Optional[str]:
+    return SKIPPED_CELLS.get((arch, shape))
+
+
+def _modality_specs(cfg, batch: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {}
+    if cfg.n_image_tokens:
+        out["images"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.frontend_feat_dim), jnp.float32
+        )
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.frontend_feat_dim), jnp.float32
+        )
+    return out
+
+
+def input_specs(cfg, shape: str, model=None) -> Dict[str, Any]:
+    """ShapeDtypeStructs for one (arch config, shape) cell.
+
+    train/prefill: {"tokens", "labels"?, modality...}
+    decode:        {"tokens", "positions", "cache", modality-free}
+    """
+    spec = SHAPES[shape]
+    B, S = spec.global_batch, spec.seq_len
+    tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if spec.kind == "train":
+        out = {"tokens": tok(B, S), "labels": tok(B, S)}
+        out.update(_modality_specs(cfg, B))
+        return out
+    if spec.kind == "prefill":
+        out = {"tokens": tok(B, S)}
+        out.update(_modality_specs(cfg, B))
+        return out
+    # decode: one new token against a cache of length S
+    assert model is not None, "decode specs need the model (for cache shapes)"
+    memory_len = (
+        cfg.n_image_tokens if cfg.n_image_tokens
+        else (cfg.encoder_seq if cfg.family == "encdec" else 0)
+    )
+    return {
+        "tokens": tok(B, 1),
+        "positions": tok(B, 1),
+        "cache": model.cache_structs(B, S, memory_len),
+    }
+
+
+def input_axes(cfg, shape: str, model=None) -> Dict[str, Any]:
+    """Logical sharding axes matching input_specs (same structure)."""
+    spec = SHAPES[shape]
+    if spec.kind == "train":
+        out = {"tokens": ("batch", None), "labels": ("batch", None)}
+        if cfg.n_image_tokens:
+            out["images"] = ("batch", None, None)
+        if cfg.family == "encdec":
+            out["frames"] = ("batch", None, None)
+        return out
+    if spec.kind == "prefill":
+        out = {"tokens": ("batch", None)}
+        if cfg.n_image_tokens:
+            out["images"] = ("batch", None, None)
+        if cfg.family == "encdec":
+            out["frames"] = ("batch", None, None)
+        return out
+    memory_len = (
+        cfg.n_image_tokens if cfg.n_image_tokens
+        else (cfg.encoder_seq if cfg.family == "encdec" else 0)
+    )
+    return {
+        "tokens": ("batch", None),
+        "positions": ("batch", None),
+        "cache": model.cache_axes(spec.global_batch, spec.seq_len, memory_len),
+    }

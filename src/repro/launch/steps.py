@@ -1,0 +1,141 @@
+"""train_step / serve_step builders shared by train.py, serve.py, dryrun.py.
+
+The same jitted functions are used on 1 CPU (smoke), one pod (16x16) and
+multi-pod (2x16x16) — only the mesh + shardings differ.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.meta import ParamMeta
+from repro.distributed.sharding import (
+    ShardingRules,
+    logical_to_spec,
+    named_sharding,
+)
+from repro.optim.grad import (
+    accumulate_gradients,
+    clip_by_global_norm,
+    compress_bf16,
+)
+from repro.optim.optimizer import Optimizer, apply_updates
+
+
+def make_train_step(
+    model,
+    opt: Optimizer,
+    clip_norm: float = 1.0,
+    num_microbatches: int = 1,
+    compress_grads: bool = False,
+) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    opt_state grows a "residual" entry when gradient compression (bf16 +
+    error feedback) is enabled.
+    """
+
+    # (bf16_param_gather is handled at the use sites — apply_w(pre_gather=)
+    # places an explicit sharding boundary on the converted weight so the
+    # FSDP all-gather moves bf16; master params stay fp32 here.)
+    loss_fn = model.loss_fn
+
+    def train_step(params, opt_state, batch):
+        loss, grads = accumulate_gradients(
+            loss_fn, params, batch, num_microbatches
+        )
+        if compress_grads:
+            grads, residual = compress_bf16(grads, opt_state.get("residual"))
+            opt_state = dict(opt_state, residual=residual)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        residual = opt_state.pop("residual") if "residual" in opt_state else None
+        updates, opt_state = opt.update(grads, opt_state, params)
+        if residual is not None:
+            opt_state = dict(opt_state, residual=residual)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(model) -> Callable:
+    """One decode step: (params, batch{tokens, positions, cache}) ->
+    (logits, new_cache)."""
+
+    def serve_step(params, batch):
+        return model.decode_step(
+            params, batch["tokens"], batch["positions"], batch["cache"]
+        )
+
+    return serve_step
+
+
+def make_prefill_step(model) -> Callable:
+    def prefill_step(params, batch):
+        mem = {k: v for k, v in batch.items() if k in ("images", "frames")}
+        return model.prefill(params, batch["tokens"], memory_inputs=mem or None)
+
+    return prefill_step
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def param_structs(meta: Any, dtype=jnp.float32) -> Any:
+    return jax.tree_util.tree_map(
+        lambda m: jax.ShapeDtypeStruct(m.infshape.shape, dtype),
+        meta, is_leaf=lambda x: isinstance(x, ParamMeta),
+    )
+
+
+def param_shardings(mesh, rules: ShardingRules, meta: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda m: named_sharding(mesh, rules, m.sharding, m.infshape.shape),
+        meta, is_leaf=lambda x: isinstance(x, ParamMeta),
+    )
+
+
+def opt_state_structs(opt: Optimizer, param_structs_tree: Any) -> Any:
+    """ShapeDtypeStructs of the optimizer state for abstract lowering."""
+    state = {"count": jax.ShapeDtypeStruct((), jnp.int32)}
+    moments = lambda: jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), param_structs_tree
+    )
+    if opt.kind == "sgd":
+        if opt.momentum:
+            state["mu"] = moments()
+    elif opt.kind == "adagrad":
+        state["nu"] = moments()
+    else:
+        state["mu"] = moments()
+        state["nu"] = moments()
+    return state
+
+
+def opt_state_shardings(mesh, rules, meta: Any, opt: Optimizer, replicated) -> Any:
+    psh = param_shardings(mesh, rules, meta)
+    state = {"count": replicated}
+    if opt.kind == "sgd":
+        if opt.momentum:
+            state["mu"] = psh
+    elif opt.kind == "adagrad":
+        state["nu"] = psh
+    else:
+        state["mu"] = psh
+        state["nu"] = psh
+    return state
+
+
+def tree_shardings(mesh, rules, axes_tree: Any, structs_tree: Any) -> Any:
+    """NamedShardings for an (axes, structs) pytree pair (inputs/caches)."""
+    return jax.tree_util.tree_map(
+        lambda ax, st: named_sharding(mesh, rules, ax, st.shape),
+        axes_tree, structs_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )

@@ -1,0 +1,196 @@
+"""Attention: GQA, sliding-window, softcap, cross-attention, muP 1/d scale.
+
+Covers all assigned-arch attention variants:
+  - GQA (n_kv_heads < n_heads) with arbitrary grouping,
+  - gemma2 local/global alternation (window masks) + attention-logit softcap,
+  - llama4 chunked-local layers (reuse window masks),
+  - whisper / llama-3.2-vision cross-attention (non-causal over memory),
+  - decode path with a position-tagged KV cache (ring buffer for windowed
+    layers, so a 500k-token decode only keeps `window` entries for local
+    layers).
+
+muP enters in exactly two places: the logit scale (1/d instead of 1/sqrt(d),
+Definition 4.1, folded into `scale`) and zero-init of the query projection
+(App. D.2) — both are decided at build time in transformer.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+NEG_INF = -2.3819763e38  # large negative, safe in bf16/f32
+
+
+def make_mask(
+    q_pos: jax.Array,      # (B, S) int32 — query token positions
+    kv_pos: jax.Array,     # (B, T) int32 — key positions; -1 = empty slot
+    causal: bool,
+    window: int = 0,
+) -> jax.Array:
+    """(B, S, T) boolean visibility mask."""
+    q = q_pos[:, :, None]
+    k = kv_pos[:, None, :]
+    mask = k >= 0
+    if causal:
+        mask &= k <= q
+    if window:
+        mask &= (q - k) < window
+    return mask
+
+
+def attend_chunked(
+    q: jax.Array,          # (B, S, H, hd)
+    k: jax.Array,          # (B, T, K, hd)
+    v: jax.Array,          # (B, T, K, hd)
+    q_pos: jax.Array,      # (B, S)
+    kv_pos: jax.Array,     # (B, T)
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    chunk: int = 2048,
+    unroll: bool = False,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Query-chunked attention: never materializes the (S, T) logit matrix —
+    peak live logits are (B, H, chunk, band).  For sliding-window layers the
+    kv band per chunk is just (chunk + window) wide, so local layers on a
+    500k-token sequence touch O(window) keys, not O(S).
+
+    `unroll=True` replaces the chunk scan with a python loop — used by the
+    dry-run costing pass because XLA cost_analysis counts scan bodies once.
+    """
+    B, S, H, hd = q.shape
+    T = k.shape[1]
+    bq = min(chunk, S)
+    assert S % bq == 0, (S, bq)
+    nq = S // bq
+    if nq == 1:
+        mask = make_mask(q_pos, kv_pos, causal, window)
+        return attend(q, k, v, mask, scale, attn_softcap, acc_dtype)
+
+    band = min(bq + window, T) if window else T
+    banded = window and band < T
+
+    def one_chunk(c, qc, qp):
+        # qc (B, bq, H, hd), qp (B, bq)
+        if banded:
+            # kv band covering [c*bq - window + 1, c*bq + bq)
+            s0 = jnp.clip(c * bq + bq - band, 0, T - band)
+            kk = jax.lax.dynamic_slice_in_dim(k, s0, band, axis=1)
+            vv = jax.lax.dynamic_slice_in_dim(v, s0, band, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_pos, s0, band, axis=1)
+        else:
+            kk, vv, kp = k, v, kv_pos
+        mask = make_mask(qp, kp, causal, window)
+        return attend(qc, kk, vv, mask, scale, attn_softcap, acc_dtype)
+
+    qs = q.reshape(B, nq, bq, H, hd).transpose(1, 0, 2, 3, 4)
+    qps = q_pos.reshape(B, nq, bq).transpose(1, 0, 2)
+    if unroll:
+        outs = [one_chunk(c, qs[c], qps[c]) for c in range(nq)]
+        y = jnp.stack(outs, axis=0)
+    else:
+        def body(_, xs):
+            c, qc, qp = xs
+            return None, one_chunk(c, qc, qp)
+
+        _, y = jax.lax.scan(body, None, (jnp.arange(nq), qs, qps))
+    return y.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def attend(
+    q: jax.Array,          # (B, S, H, hd)
+    k: jax.Array,          # (B, T, K, hd)
+    v: jax.Array,          # (B, T, K, hd)
+    mask: jax.Array,       # (B, S, T) bool
+    scale: float,
+    attn_softcap: float = 0.0,
+    acc_dtype=jnp.float32,
+) -> jax.Array:
+    """Grouped-query attention; returns (B, S, H, hd). Pure-jnp path — the
+    Pallas flash kernel (kernels/flash_attention.py) computes the same math
+    and is validated against this via kernels/ref.py."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd)
+    logits = jnp.einsum(
+        "bskgh,btkh->bkgst", qg.astype(acc_dtype), k.astype(acc_dtype),
+        preferred_element_type=acc_dtype,
+    )
+    logits = logits * jnp.asarray(scale, acc_dtype)
+    if attn_softcap:
+        logits = attn_softcap * jnp.tanh(logits / attn_softcap)
+    m = mask[:, None, None, :, :]  # (B,1,1,S,T)
+    logits = jnp.where(m, logits, jnp.asarray(NEG_INF, acc_dtype))
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(acc_dtype))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+# cache = {"k": (B,T,K,hd), "v": (B,T,K,hd), "pos": (B,T) int32 (-1 = empty)}
+# For windowed layers T == window (ring buffer indexed by pos % window);
+# for global layers T == max_seq.
+
+
+def init_kv_cache(
+    batch: int, length: int, n_kv: int, d_head: int, dtype=jnp.bfloat16
+) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, length, n_kv, d_head), dtype),
+        "v": jnp.zeros((batch, length, n_kv, d_head), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def cache_write(
+    cache: Dict[str, jax.Array],
+    k_new: jax.Array,      # (B, S, K, hd)
+    v_new: jax.Array,
+    positions: jax.Array,  # (B, S)
+    windowed: bool,
+) -> Dict[str, jax.Array]:
+    T = cache["k"].shape[1]
+    idx = positions % T if windowed else positions
+    b = jnp.arange(k_new.shape[0])[:, None]
+    return {
+        "k": cache["k"].at[b, idx].set(k_new.astype(cache["k"].dtype)),
+        "v": cache["v"].at[b, idx].set(v_new.astype(cache["v"].dtype)),
+        "pos": cache["pos"].at[b, idx].set(positions.astype(jnp.int32)),
+    }
+
+
+def cache_from_prefill(
+    k: jax.Array,          # (B, S, K, hd) — full-sequence keys
+    v: jax.Array,
+    positions: jax.Array,  # (B, S)
+    length: int,           # target cache length (window or max_seq)
+    windowed: bool,
+    dtype=jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    B, S, K, hd = k.shape
+    cache = init_kv_cache(B, length, K, hd, dtype)
+    if windowed and S > length:
+        # keep only the last `length` tokens
+        k, v, positions = k[:, -length:], v[:, -length:], positions[:, -length:]
+    return cache_write(cache, k, v, positions, windowed)
+
+
+def sharded_qkv(q, k, v):
+    """Apply the standard activation sharding to q/k/v projections.
+
+    "attn_batch" folds the model axis into the batch dim when heads cannot
+    shard over it, so attention compute never replicates across TP."""
+    q = shard(q, "attn_batch", "seq", "heads", "head_dim")
+    k = shard(k, "attn_batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v, "attn_batch", "kv_seq", "kv_heads", "head_dim")
+    return q, k, v

@@ -1,0 +1,188 @@
+"""Primitive layers: meta constructors + functional apply with muP multipliers.
+
+Everything is (params pytree, meta pytree, pure functions).  A layer here is
+a pair: ``*_meta(...) -> ParamMeta`` (called at build time) and an apply
+helper that folds in the abc-rule forward multiplier.  Multipliers are
+resolved statically from (parametrization, InfShape) so they are compile-time
+constants in the jitted graphs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.infshape import make_infshape
+from repro.core.meta import ParamMeta
+from repro.core.parametrization import Parametrization, Role
+
+# ---------------------------------------------------------------------------
+# meta constructors
+# ---------------------------------------------------------------------------
+
+
+def wmeta(
+    name: str,
+    shape: Sequence[int],
+    base_shape: Sequence[int],
+    width_axes: Sequence[int],
+    fan_in_axes: Sequence[int],
+    fan_out_axes: Sequence[int],
+    sharding: Tuple[Optional[str], ...],
+    init: str = "normal",
+    role: Optional[Role] = None,
+    init_scale: float = 1.0,
+    lr_scale: float = 1.0,
+) -> ParamMeta:
+    ish = make_infshape(
+        shape, base_shape, width_axes, fan_in_axes=fan_in_axes, fan_out_axes=fan_out_axes
+    )
+    return ParamMeta(
+        name=name,
+        infshape=ish,
+        role=role,
+        init=init,
+        sharding=tuple(sharding),
+        init_scale=init_scale,
+        lr_scale=lr_scale,
+    )
+
+
+def dense_meta(
+    name: str,
+    d_in: int,
+    d_out: int,
+    base_in: int,
+    base_out: int,
+    sharding=(None, None),
+    init: str = "normal",
+    in_is_width: bool = True,
+    out_is_width: bool = True,
+) -> ParamMeta:
+    """A (d_in, d_out) kernel; role inferred from width flags."""
+    width_axes = []
+    if in_is_width:
+        width_axes.append(0)
+    if out_is_width:
+        width_axes.append(1)
+    return wmeta(
+        name,
+        (d_in, d_out),
+        (base_in, base_out),
+        width_axes,
+        fan_in_axes=(0,),
+        fan_out_axes=(1,),
+        sharding=sharding,
+        init=init,
+    )
+
+
+def gain_meta(name: str, d: int, base_d: int) -> ParamMeta:
+    """Norm gain: vector-like, 'input weight with input 1' (App. B.1).
+
+    Zero-initialized under the gemma-style ``(1 + gain)`` convention used by
+    rmsnorm/layernorm below — equivalent to ones-init of the usual gain.
+    """
+    return wmeta(
+        name,
+        (d,),
+        (base_d,),
+        width_axes=(0,),
+        fan_in_axes=(0,),   # role is overridden to INPUT below
+        fan_out_axes=(0,),
+        sharding=(None,),
+        init="zeros",
+        role=Role.INPUT,
+    )
+
+
+def bias_meta(name: str, d: int, base_d: int) -> ParamMeta:
+    return wmeta(
+        name,
+        (d,),
+        (base_d,),
+        width_axes=(0,),
+        fan_in_axes=(0,),
+        fan_out_axes=(0,),
+        sharding=(None,),
+        init="zeros",
+        role=Role.INPUT,
+    )
+
+
+# ---------------------------------------------------------------------------
+# functional helpers
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _mult_cached(parametrization: Parametrization, meta: ParamMeta) -> float:
+    return meta.rule(parametrization).multiplier
+
+
+def mult_of(meta: ParamMeta, parametrization: Parametrization) -> float:
+    """Static forward multiplier for a tensor (1.0 except muP output-like in
+    Table-8/9 formulations)."""
+    return _mult_cached(parametrization, meta)
+
+
+def apply_w(
+    x: jax.Array,
+    w: jax.Array,
+    meta: ParamMeta,
+    parametrization: Parametrization,
+    einsum: str,
+    extra_mult: float = 1.0,
+    pre_gather: bool = False,
+) -> jax.Array:
+    m = mult_of(meta, parametrization) * extra_mult
+    wd = w.astype(x.dtype)
+    if pre_gather and x.dtype != w.dtype:
+        # force the FSDP all-gather to happen on the low-precision copy:
+        # constrain the *converted* weight to its fsdp-stripped layout, so
+        # SPMD gathers bf16 bytes instead of gathering fp32 then converting.
+        from repro.distributed.sharding import shard as _shard
+
+        axes = tuple(None if a == "fsdp" else a for a in meta.sharding)
+        if len(axes) == wd.ndim:
+            wd = _shard(wd, *axes)
+    y = jnp.einsum(einsum, x, wd)
+    if m != 1.0:
+        y = y * jnp.asarray(m, x.dtype)
+    return y
+
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gain.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(
+    x: jax.Array, gain: jax.Array, bias: jax.Array, eps: float = 1e-6
+) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + gain.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dt)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return jnp.asarray(cap, x.dtype) * jnp.tanh(x / jnp.asarray(cap, x.dtype))
+
+
+def activation(name: str):
+    return {
+        "relu": jax.nn.relu,
+        "gelu": functools.partial(jax.nn.gelu, approximate=True),
+        "silu": jax.nn.silu,
+        "tanh": jnp.tanh,
+    }[name]

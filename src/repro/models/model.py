@@ -1,0 +1,348 @@
+"""Top-level model: build_model(cfg) -> Model (init / loss / prefill / decode).
+
+One code path serves all 10 assigned architectures; the config's `pattern`,
+`family` and modality fields select the blocks.  Modality frontends are stubs
+per the assignment: whisper gets precomputed mel-frame features and the VLM
+gets precomputed image-patch features, both with a *finite* feature dim so
+the input projection is a clean muP input weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.init import init_params
+from repro.core.meta import ParamMeta
+from repro.core.parametrization import Parametrization, Role
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+from repro.models.layers import gain_meta, mult_of, rmsnorm, softcap, wmeta
+from repro.models.rope import sinusoidal
+
+ACT_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def _embed_meta(cfg) -> ParamMeta:
+    V, D, bD = cfg.vocab_size, cfg.d_model, cfg.base_d_model
+    # word embedding: input weight with conceptual fan_in 1 (one-hot input);
+    # init var sigma^2 independent of both width and vocab (App. B.1).
+    return wmeta(
+        "embed", (V, D), (V, bD), width_axes=(1,),
+        fan_in_axes=(0,), fan_out_axes=(1,),
+        sharding=("vocab", None), role=Role.INPUT,
+        init_scale=math.sqrt(V),
+    )
+
+
+def _readout_view_meta(cfg) -> ParamMeta:
+    V, D, bD = cfg.vocab_size, cfg.d_model, cfg.base_d_model
+    return wmeta(
+        "readout_view", (D, V), (bD, V), width_axes=(0,),
+        fan_in_axes=(0,), fan_out_axes=(1,), sharding=(None, "vocab"),
+    )
+
+
+def build_meta(cfg) -> Dict[str, Any]:
+    D, bD = cfg.d_model, cfg.base_d_model
+    meta: Dict[str, Any] = {
+        "embed": _embed_meta(cfg),
+        "groups": tfm.stack_group_meta(cfg),
+        "tail": tfm.tail_meta(cfg),
+        "final_norm": gain_meta("final_norm", D, bD),
+    }
+    if not cfg.tie_embeddings:
+        meta["unembed"] = wmeta(
+            "unembed", (D, cfg.vocab_size), (bD, cfg.vocab_size), width_axes=(0,),
+            fan_in_axes=(0,), fan_out_axes=(1,), sharding=(None, "vocab"),
+            init=("zeros" if cfg.zero_init_readout and cfg.parametrization != "sp"
+                  else "normal"),
+        )
+    if cfg.n_image_tokens:
+        meta["img_proj"] = wmeta(
+            "img_proj", (cfg.frontend_feat_dim, D), (cfg.frontend_feat_dim, bD),
+            width_axes=(1,), fan_in_axes=(0,), fan_out_axes=(1,),
+            sharding=(None, "w_fsdp"),
+        )
+    if cfg.family == "encdec":
+        enc_cfg = cfg.replace(pattern=("attn",), tail=(), n_layers=cfg.n_encoder_layers)
+        meta["encoder"] = {
+            "proj": wmeta(
+                "encoder.proj", (cfg.frontend_feat_dim, D),
+                (cfg.frontend_feat_dim, bD), width_axes=(1,),
+                fan_in_axes=(0,), fan_out_axes=(1,), sharding=(None, "w_fsdp"),
+            ),
+            "groups": tfm.stack_group_meta(enc_cfg),
+            "final_norm": gain_meta("encoder.final_norm", D, bD),
+        }
+    return meta
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: Any
+    meta: Dict[str, Any]
+
+    @property
+    def p13n(self) -> Parametrization:
+        return Parametrization(self.cfg.parametrization)
+
+    # ------------------------------------------------------------------
+    def init(self, rng: jax.Array, dtype=jnp.float32) -> Dict[str, Any]:
+        if self.cfg.tie_embeddings and self.p13n == Parametrization.MUP_TABLE3:
+            raise ValueError(
+                "tied embeddings are incompatible with the Table-3 muP "
+                "formulation; use MUP (Table 8) or MUP_TABLE9 (App. B)."
+            )
+        return init_params(rng, self.meta, self.p13n, self.cfg.sigma, dtype)
+
+    # ------------------------------------------------------------------
+    def _embed(self, params, tokens):
+        cfg = self.cfg
+        w = params["embed"]
+        x = jnp.take(w, tokens, axis=0)
+        m = cfg.alpha_embed * mult_of(self.meta["embed"], self.p13n)
+        x = x.astype(ACT_DTYPES[cfg.dtype]) * jnp.asarray(m, ACT_DTYPES[cfg.dtype])
+        return shard(x, "batch", "seq", "embed")
+
+    def _readout(self, params, x):
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            view = _readout_view_meta(cfg)
+            m = cfg.alpha_output * mult_of(view, self.p13n)
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+        else:
+            m = cfg.alpha_output * mult_of(self.meta["unembed"], self.p13n)
+            logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+        logits = logits.astype(jnp.float32) * m
+        logits = softcap(logits, cfg.final_softcap)
+        return shard(logits, "batch", "seq", "vocab")
+
+    def _encode(self, params, frames):
+        """Whisper encoder over precomputed frame features (B, M, feat)."""
+        cfg = self.cfg
+        enc = params["encoder"]
+        emeta = self.meta["encoder"]
+        dt = ACT_DTYPES[cfg.dtype]
+        x = jnp.einsum("bmf,fd->bmd", frames.astype(dt), enc["proj"].astype(dt))
+        x = x * mult_of(emeta["proj"], self.p13n)
+        x = x + sinusoidal(x.shape[1], cfg.d_model, dt)[None]
+        B, M = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)[None], (B, M))
+        ctx = tfm.Ctx(positions=pos, causal=False, mode="train")
+        enc_cfg = cfg.replace(
+            pattern=("attn",), tail=(), n_layers=cfg.n_encoder_layers
+        )
+        x, _ = tfm.run_stack(
+            enc_cfg, enc["groups"], emeta["groups"], {}, {}, x, ctx, None
+        )
+        return rmsnorm(x, enc["final_norm"], cfg.norm_eps)
+
+    def _memory(self, params, batch) -> Optional[jax.Array]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return self._encode(params, batch["frames"])
+        if cfg.n_image_tokens:
+            dt = ACT_DTYPES[cfg.dtype]
+            m = jnp.einsum(
+                "bmf,fd->bmd", batch["images"].astype(dt),
+                params["img_proj"].astype(dt),
+            )
+            return m * mult_of(self.meta["img_proj"], self.p13n)
+        return None
+
+    # ------------------------------------------------------------------
+    def forward(
+        self,
+        params,
+        tokens: jax.Array,                  # (B, S)
+        positions: Optional[jax.Array] = None,
+        memory_inputs: Optional[Dict] = None,
+        mode: str = "train",
+        cache: Optional[Dict] = None,
+        cache_len: int = 0,
+    ) -> Tuple[jax.Array, Optional[Dict]]:
+        cfg = self.cfg
+        B, S = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32)[None], (B, S)
+            )
+        if mode == "decode" and not memory_inputs:
+            memory = None  # cross k/v live in the cache
+        else:
+            memory = self._memory(params, memory_inputs or {})
+        x = self._embed(params, tokens)
+        if cfg.family == "encdec":
+            pe = sinusoidal(cfg.max_seq_len, cfg.d_model, x.dtype)
+            x = x + pe[positions]
+        ctx = tfm.Ctx(
+            positions=positions, causal=True, memory=memory,
+            mode=mode, cache_len=cache_len,
+        )
+        x, new_cache = tfm.run_stack(
+            cfg, params["groups"], self.meta["groups"],
+            params["tail"], self.meta["tail"], x, ctx, cache,
+        )
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._readout(params, x)
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    def loss_fn(self, params, batch, collect_acts: bool = False):
+        """Next-token CE. batch: tokens (B,S), labels (B,S) (-100 = masked)."""
+        logits, _ = self.forward(
+            params, batch["tokens"], memory_inputs=batch, mode="train"
+        )
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        if collect_acts:
+            return loss, {"logits": logits}
+        return loss
+
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens, memory_inputs=None, cache_len: int = 0):
+        cache_len = cache_len or tokens.shape[1]
+        logits, cache = self.forward(
+            params, tokens, memory_inputs=memory_inputs,
+            mode="prefill", cache_len=cache_len,
+        )
+        return logits[:, -1], cache
+
+    def decode_step(
+        self, params, tokens, positions, cache, memory_inputs=None
+    ):
+        """tokens (B,1), positions (B,1) -> (logits (B,1,V), new cache)."""
+        logits, new_cache = self.forward(
+            params, tokens, positions=positions, memory_inputs=memory_inputs,
+            mode="decode", cache=cache,
+            cache_len=0,
+        )
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    def _block_cache_spec(self, kind, batch, cache_len, memory_len):
+        """Leaves are (shape, dtype, logical_axes) triples."""
+        cfg = self.cfg
+        K, hd = cfg.n_kv_heads, cfg.d_head
+        kv_dtype = ACT_DTYPES[cfg.dtype]
+        KV_AX = ("batch", "kv_seq", "kv_heads", "head_dim")
+        MEM_AX = ("batch", None, "kv_heads", "head_dim")
+
+        def kv(length):
+            return {
+                "k": ((batch, length, K, hd), kv_dtype, KV_AX),
+                "v": ((batch, length, K, hd), kv_dtype, KV_AX),
+                "pos": ((batch, length), jnp.int32, ("batch", "kv_seq")),
+            }
+
+        def mem_kv():
+            return {
+                "k": ((batch, memory_len, K, hd), kv_dtype, MEM_AX),
+                "v": ((batch, memory_len, K, hd), kv_dtype, MEM_AX),
+            }
+
+        if kind in ("attn", "moe"):
+            return {"attn": kv(cache_len)}
+        if kind in ("local", "local_moe"):
+            return {"attn": kv(min(cfg.window_size, cache_len))}
+        if kind == "cross":
+            return {"xattn": mem_kv()}
+        if kind == "dec":
+            return {"attn": kv(cache_len), "xattn": mem_kv()}
+        if kind == "recurrent":
+            w = cfg.lru_width or cfg.d_model
+            return {
+                "mixer": {
+                    "h": ((batch, w), jnp.float32, ("batch", "ffn")),
+                    "conv": (
+                        (batch, cfg.conv_width - 1, w), kv_dtype,
+                        ("batch", None, "ffn"),
+                    ),
+                }
+            }
+        if kind == "ssd":
+            di, n = cfg.d_inner, cfg.ssm_state
+            nh = cfg.ssm_n_heads or di // cfg.ssm_head_dim
+            return {
+                "h": (
+                    (batch, nh, di // nh, n), jnp.float32,
+                    ("batch", "heads", None, None),
+                ),
+                "conv": (
+                    (batch, cfg.conv_width - 1, di + 2 * n), kv_dtype,
+                    ("batch", None, None),
+                ),
+            }
+        raise ValueError(kind)
+
+    @staticmethod
+    def _is_cache_leaf(x):
+        return isinstance(x, tuple) and len(x) == 3 and isinstance(x[0], tuple)
+
+    def _cache_spec(self, batch: int, cache_len: int, memory_len: int = 0):
+        cfg = self.cfg
+        groups = {}
+        for i, kind in enumerate(cfg.pattern):
+            spec = self._block_cache_spec(kind, batch, cache_len, memory_len)
+            groups[f"{i}_{kind}"] = jax.tree_util.tree_map(
+                lambda sd: (
+                    (cfg.n_groups,) + sd[0], sd[1], ("layers",) + tuple(sd[2])
+                ),
+                spec, is_leaf=self._is_cache_leaf,
+            )
+        tail = {
+            f"{i}_{kind}": self._block_cache_spec(kind, batch, cache_len, memory_len)
+            for i, kind in enumerate(cfg.tail)
+        }
+        return {"groups": groups, "tail": tail}
+
+    def cache_shapes(self, batch: int, cache_len: int, memory_len: int = 0):
+        """(shape, dtype) pytree of the decode cache; see init_cache."""
+        return jax.tree_util.tree_map(
+            lambda sd: (sd[0], sd[1]),
+            self._cache_spec(batch, cache_len, memory_len),
+            is_leaf=self._is_cache_leaf,
+        )
+
+    def cache_axes(self, batch: int, cache_len: int, memory_len: int = 0):
+        """Logical sharding axes pytree of the decode cache."""
+        return jax.tree_util.tree_map(
+            lambda sd: sd[2],
+            self._cache_spec(batch, cache_len, memory_len),
+            is_leaf=self._is_cache_leaf,
+        )
+
+    def cache_structs(self, batch: int, cache_len: int, memory_len: int = 0):
+        """ShapeDtypeStruct pytree (for dry-run lowering, no allocation)."""
+        return jax.tree_util.tree_map(
+            lambda sd: jax.ShapeDtypeStruct(sd[0], sd[1]),
+            self._cache_spec(batch, cache_len, memory_len),
+            is_leaf=self._is_cache_leaf,
+        )
+
+    def init_cache(self, batch: int, cache_len: int, memory_len: int = 0):
+        def mk(sd):
+            shape, dtype, _ = sd
+            if dtype == jnp.int32:
+                return jnp.full(shape, -1, jnp.int32)
+            return jnp.zeros(shape, dtype)
+
+        return jax.tree_util.tree_map(
+            mk, self._cache_spec(batch, cache_len, memory_len),
+            is_leaf=self._is_cache_leaf,
+        )
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg=cfg, meta=build_meta(cfg))

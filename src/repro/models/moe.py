@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN: token-choice top-k with per-sequence capacity.
+
+Design for the multi-pod mesh:
+  - dispatch is computed *per sequence* (no global sort) so all dispatch
+    tensors stay batch-sharded — no cross-host data-dependent communication;
+  - expert weights are stacked (E, ...) and sharded over the "model" axis
+    (expert parallelism shares the TP axis); the gathered token blocks
+    (B, E, C, D) are sharded on E too, so XLA lowers the dispatch into an
+    all-to-all over the model axis;
+  - fixed capacity C = round(top_k * S * capacity_factor / E) keeps every
+    shape static (straggler-free, no data-dependent recompiles); overflow
+    tokens fall back to the residual stream (standard GShard behaviour).
+
+muP: expert FFN kernels are hidden matrices (Table 8 hidden rules); the
+router maps width -> n_experts (finite) so it is OUTPUT-like — its logits get
+the 1/width_mult multiplier, keeping routing distributions width-stable
+(this is what makes router temperature muTransferable).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.meta import ParamMeta
+from repro.core.parametrization import Parametrization
+from repro.distributed.sharding import shard
+from repro.models.layers import apply_w, dense_meta, wmeta
+
+
+def moe_meta(cfg, name: str) -> Dict[str, ParamMeta]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    bd, bf = cfg.base_d_model, cfg.base_d_ff
+    glu = cfg.act.endswith("_glu")
+    m = {
+        "router": dense_meta(
+            f"{name}.router", d, e, bd, e,
+            sharding=(None, None), out_is_width=False,
+        ),
+        # "ffn" (-> (model, data) under FSDP) is the TP+FSDP axis for expert
+        # weights: when n_experts divides the model axis, experts take
+        # "model" first (EP) and ffn keeps "data"; when it doesn't
+        # (mixtral's 8 experts on 16-way TP), ffn gets both -> expert
+        # weights still shard 256-way.  The d_model contraction dim stays
+        # unsharded (no resharding permutes).
+        "wi": wmeta(
+            f"{name}.wi", (e, d, (2 if glu else 1) * f),
+            (e, bd, (2 if glu else 1) * bf),
+            width_axes=(1, 2), fan_in_axes=(1,), fan_out_axes=(2,),
+            sharding=("experts", None, "ffn"),
+        ),
+        "wo": wmeta(
+            f"{name}.wo", (e, f, d), (e, bf, bd),
+            width_axes=(1, 2), fan_in_axes=(1,), fan_out_axes=(2,),
+            sharding=("experts", "ffn", None),
+        ),
+    }
+    return m
+
+
+def _capacity(cfg, seq_len: int) -> int:
+    c = int(math.ceil(cfg.top_k * seq_len * cfg.capacity_factor / cfg.n_experts))
+    return max(8, min(c, seq_len * cfg.top_k))
+
+
+def moe_ffn(
+    cfg,
+    params: Dict[str, jax.Array],
+    meta: Dict[str, ParamMeta],
+    x: jax.Array,                     # (B, S, D)
+    parametrization: Parametrization,
+    act_fn,
+) -> jax.Array:
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, S)
+    glu = cfg.act.endswith("_glu")
+
+    # ---- routing (fp32 for numerics) -----------------------------------
+    logits = apply_w(
+        x.astype(jnp.float32), params["router"].astype(jnp.float32),
+        meta["router"], parametrization, "bsd,de->bse",
+    )
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    gate, expert_idx = jax.lax.top_k(probs, k)                 # (B,S,k)
+    if k > 1:
+        gate = gate / (jnp.sum(gate, axis=-1, keepdims=True) + 1e-9)
+
+    # ---- per-sequence capacity dispatch ---------------------------------
+    T = S * k
+    flat_e = expert_idx.reshape(B, T)                          # (B,T)
+    flat_g = gate.reshape(B, T)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)            # (B,T,E)
+    rank = (jnp.cumsum(oh, axis=1) - 1) * oh                   # pos within expert
+    rank = jnp.sum(rank, axis=-1)                              # (B,T)
+    keep = rank < C
+    # dispatch index table: d_idx[b, e, c] = flattened slot t (sentinel = T)
+    b_ix = jnp.arange(B)[:, None]
+    t_ix = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+    d_idx = jnp.full((B, E, C), T, jnp.int32)
+    # dropped slots write to expert index E (out of bounds) -> mode="drop"
+    d_idx = d_idx.at[
+        b_ix, jnp.where(keep, flat_e, E), jnp.where(keep, rank, 0)
+    ].set(t_ix, mode="drop")
+    # sentinel row so gathers of dropped slots read zeros
+    tok_of_slot = jnp.minimum(d_idx // k, S)                   # (B,E,C) in [0,S]
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, D), x.dtype)], axis=1)
+    xs = x_pad[b_ix[:, :, None], tok_of_slot]                  # (B,E,C,D)
+    xs = shard(xs, "batch", "experts", None, None)
+
+    # ---- expert computation (E sharded on "model") ----------------------
+    wi = params["wi"].astype(x.dtype)
+    wo = params["wo"].astype(x.dtype)
+    if cfg.bf16_param_gather and x.dtype != params["wi"].dtype:
+        # force the (large) expert-weight FSDP gathers to move bf16
+        wi = shard(wi, *(None if a == "fsdp" else a for a in meta["wi"].sharding))
+        wo = shard(wo, *(None if a == "fsdp" else a for a in meta["wo"].sharding))
+    h = jnp.einsum("becd,edf->becf", xs, wi)
+    if glu:
+        g, u = jnp.split(h, 2, axis=-1)
+        h = act_fn(g) * u
+    else:
+        h = act_fn(h)
+    h = shard(h, "batch", "experts", None, "ffn")
+    ys = jnp.einsum("becf,efd->becd", h, wo)                   # (B,E,C,D)
+
+    # ---- combine ---------------------------------------------------------
+    g_pad = jnp.concatenate(
+        [flat_g, jnp.zeros((B, 1), flat_g.dtype)], axis=1
+    )  # (B,T+1)
+    slot_gate = g_pad[b_ix[:, :, None], jnp.minimum(d_idx, T)]  # (B,E,C)
+    ys = ys * slot_gate[..., None].astype(ys.dtype)
+    out = jnp.zeros((B, S + 1, D), ys.dtype)
+    out = out.at[b_ix[:, :, None], tok_of_slot].add(ys, mode="drop")
+    return out[:, :S].astype(x.dtype)
+
+
+def aux_load_balance_loss(
+    logits: jax.Array, expert_idx: jax.Array, n_experts: int
+) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (exposed for training)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], n_experts, dtype=jnp.float32),
+        axis=(0, 1),
+    )
+    return n_experts * jnp.sum(me * ce)

@@ -1,0 +1,36 @@
+"""Rotary position embeddings (+ sinusoidal absolute, for whisper)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(d_head: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    return 1.0 / (theta**exponent)  # (d_head/2,)
+
+
+def apply_rope(
+    x: jax.Array,  # (..., S, H, d_head)
+    positions: jax.Array,  # broadcastable to (..., S)
+    theta: float = 10000.0,
+) -> jax.Array:
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, d/2)
+    angles = angles[..., None, :]  # broadcast over heads: (..., S, 1, d/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal(seq_len: int, d_model: int, dtype=jnp.float32) -> jax.Array:
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(
+        jnp.arange(0, d_model, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d_model)
+    )
+    pe = jnp.zeros((seq_len, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)

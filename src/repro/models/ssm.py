@@ -1,0 +1,227 @@
+"""Mamba-2 SSD (state-space duality) mixer block.
+
+Chunked SSD algorithm (Dao & Gu 2024, arXiv:2405.21060): the sequence is
+split into chunks of length Q; within-chunk terms are computed as masked
+attention-like matmuls (MXU-friendly), cross-chunk terms by a log-depth
+associative scan over chunk states — this is the TPU-native adaptation (no
+sequential scan on the critical path).
+
+muP classification (DESIGN.md §Arch-applicability):
+  w_x / w_z / w_dt / out_proj : hidden matrices (width->width)
+  w_B / w_C                   : width -> ssm_state (finite)  => OUTPUT-like
+                                (their 1/width multiplier is the SSM analogue
+                                of 1/d attention: C.h.B inner products stay
+                                Theta(1) with width)
+  A_log / dt_bias / D_skip / norm gain : vector-like (constant LR)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.meta import ParamMeta
+from repro.core.parametrization import Parametrization, Role
+from repro.distributed.sharding import shard
+from repro.models.layers import apply_w, bias_meta, dense_meta, wmeta
+
+
+def ssd_meta(cfg, name: str) -> Dict[str, ParamMeta]:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_n_heads or di // cfg.ssm_head_dim
+    bd = cfg.base_d_model
+    bdi = int(round(di * bd / d))
+    bnh = max(int(round(nh * bd / d)), 1)
+    cw = cfg.conv_width
+    return {
+        "w_x": dense_meta(f"{name}.w_x", d, di, bd, bdi, sharding=(None, "ffn")),
+        "w_z": dense_meta(f"{name}.w_z", d, di, bd, bdi, sharding=(None, "ffn")),
+        "w_B": dense_meta(
+            f"{name}.w_B", d, n, bd, n, sharding=(None, None), out_is_width=False
+        ),
+        "w_C": dense_meta(
+            f"{name}.w_C", d, n, bd, n, sharding=(None, None), out_is_width=False
+        ),
+        "w_dt": dense_meta(f"{name}.w_dt", d, nh, bd, bnh, sharding=(None, None)),
+        "dt_bias": bias_meta(f"{name}.dt_bias", nh, bnh),
+        "A_log": wmeta(
+            f"{name}.A_log", (nh,), (bnh,), width_axes=(0,), fan_in_axes=(0,),
+            fan_out_axes=(0,), sharding=(None,), init="normal", role=Role.INPUT,
+        ),
+        "D_skip": wmeta(
+            f"{name}.D_skip", (nh,), (bnh,), width_axes=(0,), fan_in_axes=(0,),
+            fan_out_axes=(0,), sharding=(None,), init="ones", role=Role.INPUT,
+        ),
+        "conv_w": wmeta(
+            f"{name}.conv_w", (cw, di + 2 * n), (cw, bdi + 2 * n), width_axes=(1,),
+            fan_in_axes=(0,), fan_out_axes=(1,), sharding=(None, None),
+        ),
+        "conv_b": bias_meta(f"{name}.conv_b", di + 2 * n, bdi + 2 * n),
+        "norm_gain": bias_meta(f"{name}.norm_gain", di, bdi),
+        "out_proj": dense_meta(
+            f"{name}.out_proj", di, d, bdi, bd, sharding=("ffn", None)
+        ),
+    }
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """log_a (..., Q) -> (..., Q, Q) with out[i,j] = sum_{k=j+1..i} log_a[k],
+    -inf for j > i (strictly causal cumulative decay)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # sum_{j+1..i}
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _causal_conv(u, conv_w, conv_b, state=None):
+    cw = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    y = sum(
+        full[:, i : i + u.shape[1]] * conv_w[i].astype(u.dtype) for i in range(cw)
+    )
+    y = jax.nn.silu(y + conv_b.astype(u.dtype))
+    new_state = full[:, -(cw - 1) :] if cw > 1 else pad
+    return y, new_state
+
+
+def ssd_chunked(
+    x: jax.Array,        # (B,S,nh,hd) inputs (already dt-scaled NOT applied)
+    dt: jax.Array,       # (B,S,nh) — softplus'd step sizes
+    A: jax.Array,        # (nh,) negative decay rates
+    Bm: jax.Array,       # (B,S,n)
+    Cm: jax.Array,       # (B,S,n)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B,nh,hd,n)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,nh,hd), h_last (B,nh,hd,n)). fp32 internally."""
+    Bsz, S, nh, hd = x.shape
+    n = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    f32 = jnp.float32
+    x, dt, Bm, Cm = (t.astype(f32) for t in (x, dt, Bm, Cm))
+    A = A.astype(f32)
+
+    log_a = dt * A[None, None, :]                             # (B,S,nh) <= 0
+    u = x * dt[..., None]                                     # dt-scaled input
+    # chunked views
+    xc = u.reshape(Bsz, nc, Q, nh, hd)
+    ac = log_a.reshape(Bsz, nc, Q, nh)
+    bc = Bm.reshape(Bsz, nc, Q, n)
+    cc = Cm.reshape(Bsz, nc, Q, n)
+
+    # ---- intra-chunk (attention-like, masked by decay) -------------------
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))            # (B,nc,nh,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)            # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", scores, L, xc)
+
+    # ---- chunk states -----------------------------------------------------
+    a_sum = jnp.sum(ac, axis=2)                               # (B,nc,nh)
+    decay_to_end = jnp.exp(a_sum[:, :, None, :] - jnp.cumsum(ac, axis=2))
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, decay_to_end, xc)
+
+    # ---- inter-chunk associative scan ------------------------------------
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hd, n), f32)
+    # H_c = exp(a_sum_c) * H_{c-1} + S_c ; prepend h0
+    gam = jnp.exp(a_sum)                                      # (B,nc,nh)
+    gam_e = jnp.concatenate([jnp.ones_like(gam[:, :1]), gam], axis=1)
+    st_e = jnp.concatenate([h0[:, None], states], axis=1)     # (B,nc+1,nh,hd,n)
+
+    def combine(p, q):
+        g1, s1 = p
+        g2, s2 = q
+        return g1 * g2, g2[..., None, None] * s1 + s2
+
+    G, H = jax.lax.associative_scan(combine, (gam_e, st_e), axis=1)
+    h_prev = H[:, :-1]                                        # state BEFORE chunk c
+    h_last = H[:, -1]
+
+    # ---- inter-chunk output ----------------------------------------------
+    decay_from_start = jnp.exp(jnp.cumsum(ac, axis=2))        # (B,nc,Q,nh)
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp", cc, decay_from_start, h_prev)
+
+    y = (y_diag + y_off).reshape(Bsz, S, nh, hd)
+    return y, h_last
+
+
+def ssd_decode_step(x, dt, A, Bm, Cm, h):
+    """Single token: x (B,1,nh,hd), dt (B,1,nh), Bm/Cm (B,1,n), h (B,nh,hd,n)."""
+    f32 = jnp.float32
+    x, dt, Bm, Cm, h = (t.astype(f32) for t in (x, dt, Bm, Cm, h))
+    a = jnp.exp(dt[:, 0] * A.astype(f32)[None])               # (B,nh)
+    u = x[:, 0] * dt[:, 0, :, None]                           # (B,nh,hd)
+    h_new = a[..., None, None] * h + jnp.einsum("bn,bhp->bhpn", Bm[:, 0], u)
+    y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0], h_new)
+    return y[:, None], h_new                                  # (B,1,nh,hd)
+
+
+def init_ssd_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_n_heads or di // cfg.ssm_head_dim
+    hd = di // nh
+    return {
+        "h": jnp.zeros((batch, nh, hd, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * n), dtype),
+    }
+
+
+def ssd_block(
+    cfg, params, meta, x, parametrization: Parametrization, cache=None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Optional[Dict]]:
+    """The full Mamba-2 mixer (pre-normed input x (B,S,D))."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_n_heads or di // cfg.ssm_head_dim
+    hd = di // nh
+
+    xs = apply_w(x, params["w_x"], meta["w_x"], parametrization, "bsd,di->bsi")
+    z = apply_w(x, params["w_z"], meta["w_z"], parametrization, "bsd,di->bsi")
+    Bm = apply_w(x, params["w_B"], meta["w_B"], parametrization, "bsd,dn->bsn")
+    Cm = apply_w(x, params["w_C"], meta["w_C"], parametrization, "bsd,dn->bsn")
+    dt_raw = apply_w(x, params["w_dt"], meta["w_dt"], parametrization, "bsd,dh->bsh")
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (nh,) < 0
+
+    xs = shard(xs, "batch", "seq", "ffn")
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_state = None if cache is None else cache["conv"]
+    conv_out, new_conv = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv_state
+    )
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + n], axis=-1)
+    xh = xs.reshape(*xs.shape[:2], nh, hd)
+
+    if mode == "decode":
+        y, h_last = ssd_decode_step(xh, dt, A, Bm, Cm, cache["h"])
+        new_cache = {"h": h_last, "conv": new_conv}
+    else:
+        h0 = cache.get("h") if cache else None
+        y, h_last = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk, h0=h0)
+        new_cache = (
+            {"h": h_last, "conv": new_conv} if mode == "prefill" else None
+        )
+
+    y = y + params["D_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(
+        jnp.float32
+    )
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    g = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (
+        g.astype(jnp.float32)
+        * jax.lax.rsqrt(var + 1e-6)
+        * (1.0 + params["norm_gain"].astype(jnp.float32))
+    ).astype(x.dtype)
+    out = apply_w(g, params["out_proj"], meta["out_proj"], parametrization, "bsi,id->bsd")
+    return out, new_cache

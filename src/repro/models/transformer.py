@@ -1,0 +1,447 @@
+"""Block assembly: pattern-based decoder stacks with scan-over-groups.
+
+A config declares a repeating *group* of blocks (`cfg.pattern`, e.g.
+("local", "attn") for gemma2 or ("attn",)*4 + ("cross",) for the VLM) plus an
+optional non-repeating `tail`.  Parameters for each block position in the
+group are stacked over `n_groups` and the stack is traversed with
+`jax.lax.scan`, so HLO size (and compile time) is independent of depth —
+essential for lowering the 100-layer VLM on 512 host devices.
+
+Each block kind provides `*_block_meta(cfg, name)` and an apply that handles
+three modes: full-sequence (train), prefill (full sequence + cache out), and
+decode (one token + cache in/out).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.core.infshape import InfDim, InfShape
+from repro.core.meta import ParamMeta
+from repro.core.parametrization import Parametrization, attention_scale
+from repro.distributed.sharding import shard
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    activation,
+    apply_w,
+    dense_meta,
+    gain_meta,
+    rmsnorm,
+    wmeta,
+)
+from repro.models.rope import apply_rope
+
+ATTN_KINDS = ("attn", "local", "cross", "moe", "local_moe", "dec")
+
+
+@dataclasses.dataclass
+class Ctx:
+    """Per-call context threaded through all blocks."""
+
+    positions: jax.Array                 # (B, S) token positions
+    causal: bool = True
+    memory: Optional[jax.Array] = None   # (B, M, D) encoder/image embeddings
+    memory_pos: Optional[jax.Array] = None
+    mode: str = "train"                  # "train" | "prefill" | "decode"
+    cache_len: int = 0                   # target KV cache length (prefill/decode)
+
+
+# ---------------------------------------------------------------------------
+# meta construction
+# ---------------------------------------------------------------------------
+
+def _attn_meta(cfg, name: str, cross: bool = False) -> Dict[str, ParamMeta]:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    bd, bH, bK, bhd = (
+        cfg.base_d_model, cfg.base_n_heads, cfg.base_n_kv_heads, cfg.base_d_head
+    )
+    q_init = "zeros" if (cfg.zero_init_query and cfg.parametrization != "sp") else "normal"
+    return {
+        "wq": wmeta(
+            f"{name}.wq", (d, H, hd), (bd, bH, bhd), width_axes=(0, 1, 2),
+            fan_in_axes=(0,), fan_out_axes=(1, 2),
+            sharding=(None, "heads", "w_fsdp"), init=q_init,
+        ),
+        "wk": wmeta(
+            f"{name}.wk", (d, K, hd), (bd, bK, bhd), width_axes=(0, 1, 2),
+            fan_in_axes=(0,), fan_out_axes=(1, 2),
+            sharding=(None, "kv_heads", "w_fsdp"),
+        ),
+        "wv": wmeta(
+            f"{name}.wv", (d, K, hd), (bd, bK, bhd), width_axes=(0, 1, 2),
+            fan_in_axes=(0,), fan_out_axes=(1, 2),
+            sharding=(None, "kv_heads", "w_fsdp"),
+        ),
+        "wo": wmeta(
+            f"{name}.wo", (H, hd, d), (bH, bhd, bd), width_axes=(0, 1, 2),
+            fan_in_axes=(0, 1), fan_out_axes=(2,),
+            sharding=("heads", None, "w_fsdp"),
+        ),
+    }
+
+
+def _mlp_meta(cfg, name: str) -> Dict[str, ParamMeta]:
+    d, f = cfg.d_model, cfg.d_ff
+    bd, bf = cfg.base_d_model, cfg.base_d_ff
+    glu = cfg.act.endswith("_glu")
+    # fsdp rides on the "ffn" logical axis (-> (model, data)); the d_model
+    # contraction dim stays unsharded to avoid SPMD resharding permutes.
+    return {
+        "wi": wmeta(
+            f"{name}.wi", (d, (2 if glu else 1) * f), (bd, (2 if glu else 1) * bf),
+            width_axes=(0, 1), fan_in_axes=(0,), fan_out_axes=(1,),
+            sharding=(None, "ffn"),
+        ),
+        "wo": dense_meta(f"{name}.wo", f, d, bf, bd, sharding=("ffn", None)),
+    }
+
+
+def block_meta(cfg, kind: str, name: str) -> Dict[str, Any]:
+    d, bd = cfg.d_model, cfg.base_d_model
+    m: Dict[str, Any] = {"ln1": gain_meta(f"{name}.ln1", d, bd)}
+    if kind == "ssd":
+        m["mixer"] = ssm_lib.ssd_meta(cfg, f"{name}.ssd")
+        return m  # mamba blocks: single norm, no separate MLP
+    if kind == "recurrent":
+        m["mixer"] = rglru_lib.rglru_meta(cfg, f"{name}.rglru")
+    elif kind == "cross":
+        m["xattn"] = _attn_meta(cfg, f"{name}.xattn", cross=True)
+    elif kind == "dec":
+        m["attn"] = _attn_meta(cfg, f"{name}.attn")
+        m["ln_x"] = gain_meta(f"{name}.ln_x", d, bd)
+        m["xattn"] = _attn_meta(cfg, f"{name}.xattn", cross=True)
+    else:  # attn / local / moe / local_moe
+        m["attn"] = _attn_meta(cfg, f"{name}.attn")
+    if cfg.post_attn_norm:
+        m["ln1_post"] = gain_meta(f"{name}.ln1_post", d, bd)
+    m["ln2"] = gain_meta(f"{name}.ln2", d, bd)
+    if kind.endswith("moe"):
+        m["mlp"] = moe_lib.moe_meta(cfg, f"{name}.moe")
+    else:
+        m["mlp"] = _mlp_meta(cfg, f"{name}.mlp")
+    if cfg.post_attn_norm:
+        m["ln2_post"] = gain_meta(f"{name}.ln2_post", d, bd)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _project_kv(cfg, params, meta, h, p13n):
+    pg = cfg.bf16_param_gather
+    k = apply_w(h, params["wk"], meta["wk"], p13n, "bsd,dkh->bskh", pre_gather=pg)
+    v = apply_w(h, params["wv"], meta["wv"], p13n, "bsd,dkh->bskh", pre_gather=pg)
+    return k, v
+
+
+def _self_attention(
+    cfg, params, meta, x, ctx: Ctx, windowed: bool, cache, p13n
+) -> Tuple[jax.Array, Any]:
+    """Returns (attn_out, new_cache)."""
+    B, S, D = x.shape
+    window = cfg.window_size if windowed else 0
+    q = apply_w(
+        x, params["wq"], meta["wq"], p13n, "bsd,dhk->bshk",
+        pre_gather=cfg.bf16_param_gather,
+    )
+    k, v = _project_kv(cfg, params, meta, x, p13n)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, ctx.positions, cfg.rope_theta)
+        k = apply_rope(k, ctx.positions, cfg.rope_theta)
+    q, k, v = attn_lib.sharded_qkv(q, k, v)
+    scale = attention_scale(
+        Parametrization(p13n), cfg.d_head, cfg.base_d_head, cfg.alpha_attn
+    )
+
+    new_cache = None
+    if ctx.mode in ("train", "prefill"):
+        if ctx.mode == "prefill":
+            clen = min(window, ctx.cache_len) if window else ctx.cache_len
+            new_cache = attn_lib.cache_from_prefill(
+                k, v, ctx.positions, clen, windowed=bool(window), dtype=k.dtype
+            )
+        S = x.shape[1]
+        acc = jnp.bfloat16 if cfg.attn_acc == "bfloat16" else jnp.float32
+        if S > cfg.attn_chunk:
+            # q-chunked: bounded-memory attention for long sequences
+            out = attn_lib.attend_chunked(
+                q, k, v, ctx.positions, ctx.positions, scale,
+                causal=ctx.causal, window=window,
+                attn_softcap=cfg.attn_softcap, chunk=cfg.attn_chunk,
+                unroll=not cfg.scan_layers, acc_dtype=acc,
+            )
+        else:
+            mask = attn_lib.make_mask(
+                ctx.positions, ctx.positions, ctx.causal, window
+            )
+            out = attn_lib.attend(q, k, v, mask, scale, cfg.attn_softcap, acc)
+    else:  # decode
+        new_cache = attn_lib.cache_write(cache, k, v, ctx.positions, bool(window))
+        kk, vv = new_cache["k"], new_cache["v"]
+        mask = attn_lib.make_mask(ctx.positions, new_cache["pos"], True, window)
+        out = attn_lib.attend(q, kk, vv, mask, scale, cfg.attn_softcap)
+    out = apply_w(
+        out, params["wo"], meta["wo"], p13n, "bshk,hkd->bsd",
+        pre_gather=cfg.bf16_param_gather,
+    )
+    return out, new_cache
+
+
+def _cross_attention(cfg, params, meta, x, ctx: Ctx, cache, p13n):
+    q = apply_w(x, params["wq"], meta["wq"], p13n, "bsd,dhk->bshk")
+    if cache is not None and "k" in cache and ctx.mode == "decode":
+        k, v = cache["k"], cache["v"]
+        new_cache = cache
+    else:
+        assert ctx.memory is not None, "cross-attention requires ctx.memory"
+        k, v = _project_kv(cfg, params, meta, ctx.memory.astype(x.dtype), p13n)
+        new_cache = {"k": k, "v": v} if ctx.mode in ("prefill", "decode") else None
+    B, S = x.shape[:2]
+    M = k.shape[1]
+    mask = jnp.ones((B, S, M), bool)  # full visibility over memory
+    scale = attention_scale(
+        Parametrization(p13n), cfg.d_head, cfg.base_d_head, cfg.alpha_attn
+    )
+    out = attn_lib.attend(q, k, v, mask, scale, 0.0)
+    out = apply_w(out, params["wo"], meta["wo"], p13n, "bshk,hkd->bsd")
+    return out, new_cache
+
+
+def _mlp(cfg, params, meta, h, p13n):
+    act = activation(cfg.act.replace("_glu", ""))
+    pg = cfg.bf16_param_gather
+    hh = apply_w(h, params["wi"], meta["wi"], p13n, "bsd,df->bsf", pre_gather=pg)
+    if cfg.act.endswith("_glu"):
+        g, u = jnp.split(hh, 2, axis=-1)
+        hh = act(g) * u
+    else:
+        hh = act(hh)
+    hh = shard(hh, "batch", "seq", "ffn")
+    return apply_w(hh, params["wo"], meta["wo"], p13n, "bsf,fd->bsd", pre_gather=pg)
+
+
+def apply_block(
+    cfg, kind: str, params, meta, x, ctx: Ctx, cache=None
+) -> Tuple[jax.Array, Any]:
+    """One residual block.  Returns (x, new_cache)."""
+    p13n = Parametrization(cfg.parametrization)
+    eps = cfg.norm_eps
+    new_cache: Dict[str, Any] = {}
+
+    h = rmsnorm(x, params["ln1"], eps)
+
+    if kind == "ssd":
+        out, c = ssm_lib.ssd_block(
+            cfg, params["mixer"], meta["mixer"], h, p13n, cache, mode=ctx.mode
+        )
+        return x + out, c
+
+    if kind == "recurrent":
+        act = activation("gelu")
+        out, mixer_cache = rglru_lib.rglru_block(
+            cfg, params["mixer"], meta["mixer"], h, p13n, act,
+            None if cache is None else cache.get("mixer"), mode=ctx.mode,
+        )
+        cache_key = "mixer"
+    elif kind == "cross":
+        out, mixer_cache = _cross_attention(
+            cfg, params["xattn"], meta["xattn"], h, ctx,
+            None if cache is None else cache.get("xattn"), p13n,
+        )
+        cache_key = "xattn"
+    else:
+        windowed = kind.startswith("local")
+        out, mixer_cache = _self_attention(
+            cfg, params["attn"], meta["attn"], h, ctx,
+            windowed, None if cache is None else cache.get("attn"), p13n,
+        )
+        cache_key = "attn"
+    if cfg.post_attn_norm:
+        out = rmsnorm(out, params["ln1_post"], eps)
+    if cfg.remat == "blocks":
+        # name the post-TP-collective tensor so the "blocks" remat policy
+        # saves it: backward then reuses the forward all-reduce result
+        # instead of recomputing the whole sublayer (incl. its collectives)
+        out = checkpoint_name(out, "mixer_out")
+    x = x + out
+    if mixer_cache is not None:
+        new_cache[cache_key] = mixer_cache
+
+    if kind == "dec":  # whisper decoder: extra cross-attention sublayer
+        hx = rmsnorm(x, params["ln_x"], eps)
+        xout, xcache = _cross_attention(
+            cfg, params["xattn"], meta["xattn"], hx, ctx,
+            None if cache is None else cache.get("xattn"), p13n,
+        )
+        x = x + xout
+        if xcache is not None:
+            new_cache["xattn"] = xcache
+
+    h2 = rmsnorm(x, params["ln2"], eps)
+    if kind.endswith("moe"):
+        act = activation(cfg.act.replace("_glu", ""))
+        mout = moe_lib.moe_ffn(cfg, params["mlp"], meta["mlp"], h2, p13n, act)
+    else:
+        mout = _mlp(cfg, params["mlp"], meta["mlp"], h2, p13n)
+    if cfg.post_attn_norm:
+        mout = rmsnorm(mout, params["ln2_post"], eps)
+    if cfg.remat == "blocks":
+        mout = checkpoint_name(mout, "mixer_out")
+    x = x + mout
+    x = shard(x, "batch", "seq", "embed")
+    return x, (new_cache or None)
+
+
+# ---------------------------------------------------------------------------
+# stacking + scan
+# ---------------------------------------------------------------------------
+
+def stack_meta(meta: Any, n: int) -> Any:
+    """Lift a block meta pytree to a stack of n layers (leading finite dim)."""
+
+    def lift(m: ParamMeta) -> ParamMeta:
+        ish = m.infshape
+        nd = len(ish.dims)
+        dims = (InfDim.finite(n),) + ish.dims
+        shift = lambda axes: tuple((a % nd) + 1 for a in axes)
+        new_ish = InfShape(
+            dims=dims,
+            fan_in_axes=shift(ish.fan_in_axes),
+            fan_out_axes=shift(ish.fan_out_axes),
+        )
+        return dataclasses.replace(
+            m,
+            name=f"stacked.{m.name}",
+            infshape=new_ish,
+            sharding=("layers",) + tuple(m.sharding),
+        )
+
+    return jax.tree_util.tree_map(
+        lift, meta, is_leaf=lambda x: isinstance(x, ParamMeta)
+    )
+
+
+def stack_group_meta(cfg) -> Dict[str, Any]:
+    """Meta for the repeated group: {"<i>_<kind>": stacked block meta}."""
+    out = {}
+    for i, kind in enumerate(cfg.pattern):
+        bm = block_meta(cfg, kind, f"group.{i}.{kind}")
+        out[f"{i}_{kind}"] = stack_meta(bm, cfg.n_groups)
+    return out
+
+
+def tail_meta(cfg) -> Dict[str, Any]:
+    return {
+        f"{i}_{kind}": block_meta(cfg, kind, f"tail.{i}.{kind}")
+        for i, kind in enumerate(cfg.tail)
+    }
+
+
+def run_stack(
+    cfg,
+    group_params: Dict[str, Any],
+    group_meta: Dict[str, Any],
+    tail_params: Dict[str, Any],
+    tmeta: Dict[str, Any],
+    x: jax.Array,
+    ctx: Ctx,
+    caches: Optional[Dict[str, Any]] = None,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    """Scan over groups then unrolled tail. caches mirrors the params layout:
+    {"groups": {key: stacked cache}, "tail": {key: cache}} or None."""
+    keys = [f"{i}_{kind}" for i, kind in enumerate(cfg.pattern)]
+    unstacked_meta = {
+        k: jax.tree_util.tree_map(
+            lambda m: _unstack_meta(m),
+            group_meta[k],
+            is_leaf=lambda x: isinstance(x, ParamMeta),
+        )
+        for k in keys
+    }
+    have_cache = caches is not None
+    # prefill has no input cache but must *emit* one
+    collect = have_cache or ctx.mode == "prefill"
+
+    def group_fn(x, slices):
+        p_slice, c_slice = slices
+        new_c = {}
+        for i, kind in enumerate(cfg.pattern):
+            k = keys[i]
+            c_in = c_slice.get(k) if have_cache else None
+            x, c_out = apply_block(
+                cfg, kind, p_slice[k], unstacked_meta[k], x, ctx, c_in
+            )
+            if collect:
+                new_c[k] = c_out if c_out is not None else {}
+        return x, new_c
+
+    if cfg.remat == "full":
+        group_fn = jax.checkpoint(group_fn)
+    elif cfg.remat == "blocks":
+        group_fn = jax.checkpoint(
+            group_fn,
+            policy=jax.checkpoint_policies.save_only_these_names("mixer_out"),
+        )
+
+    def scan_body(x, slices):
+        return group_fn(x, slices)
+
+    cache_groups = caches["groups"] if have_cache else {k: {} for k in keys}
+    if getattr(cfg, "scan_layers", True):
+        x, new_group_caches = jax.lax.scan(
+            scan_body, x, (group_params, cache_groups)
+        )
+    else:
+        # unrolled (dry-run costing path: exact per-layer FLOP accounting)
+        outs = []
+        for g in range(cfg.n_groups):
+            slices = jax.tree_util.tree_map(
+                lambda arr: arr[g], (group_params, cache_groups)
+            )
+            x, c_out = scan_body(x, slices)
+            outs.append(c_out)
+        if outs and jax.tree_util.tree_leaves(outs[0]):
+            new_group_caches = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs
+            )
+        else:
+            new_group_caches = {k: {} for k in keys}
+
+    new_tail = {}
+    for i, kind in enumerate(cfg.tail):
+        k = f"{i}_{kind}"
+        c_in = caches["tail"].get(k) if have_cache else None
+        x, c_out = apply_block(cfg, kind, tail_params[k], tmeta[k], x, ctx, c_in)
+        if collect:
+            new_tail[k] = c_out if c_out is not None else {}
+
+    if collect:
+        return x, {"groups": new_group_caches, "tail": new_tail}
+    return x, None
+
+
+def _unstack_meta(m: ParamMeta) -> ParamMeta:
+    """Inverse of stack_meta for use inside the scan body."""
+    ish = m.infshape
+    dims = ish.dims[1:]
+    nd1 = len(ish.dims)
+    unshift = lambda axes: tuple((a % nd1) - 1 for a in axes)
+    new_ish = InfShape(
+        dims=dims,
+        fan_in_axes=unshift(ish.fan_in_axes),
+        fan_out_axes=unshift(ish.fan_out_axes),
+    )
+    return dataclasses.replace(
+        m,
+        name=m.name.replace("stacked.", ""),
+        infshape=new_ish,
+        sharding=tuple(m.sharding)[1:],
+    )

@@ -1,0 +1,83 @@
+"""Gradient utilities: global-norm clipping, bf16 compression with error
+feedback, and microbatch gradient accumulation.
+
+Clipping with a width-constant clip value is muP-compatible (App. B.3).
+Compression is a distributed-optimization trick for the multi-pod regime:
+grads are cast to bf16 before the (XLA-inserted) cross-replica reduction;
+the quantization residual is carried to the next step (error feedback), so
+the bias does not accumulate.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def compress_bf16(grads: Any, residual: Optional[Any]) -> Tuple[Any, Any]:
+    """Quantize grads to bf16 with error feedback.
+
+    Returns (quantized_as_f32, new_residual).  Call *before* the optimizer;
+    under pjit the reduction over the data axis then moves bf16 bytes.
+    """
+    if residual is not None:
+        grads = jax.tree_util.tree_map(lambda g, r: g + r, grads, residual)
+    q = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads
+    )
+    new_residual = jax.tree_util.tree_map(lambda g, qq: g - qq, grads, q)
+    return q, new_residual
+
+
+def accumulate_gradients(
+    loss_fn: Callable,
+    params: Any,
+    batch: Any,
+    num_microbatches: int,
+) -> Tuple[jax.Array, Any]:
+    """Microbatched grad accumulation via lax.scan (constant memory).
+
+    batch leaves must have a leading global-batch dim divisible by
+    num_microbatches.  Returns (mean_loss, mean_grads).
+    """
+    if num_microbatches <= 1:
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        return loss, grads
+
+    def reshape(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape(num_microbatches, b // num_microbatches, *x.shape[1:])
+
+    micro = jax.tree_util.tree_map(reshape, batch)
+    zero_g = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+        g_acc = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+        )
+        return (loss_acc + loss, g_acc), None
+
+    (loss_sum, g_sum), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), zero_g), micro
+    )
+    inv = 1.0 / num_microbatches
+    return loss_sum * inv, jax.tree_util.tree_map(lambda g: g * inv, g_sum)

@@ -1,0 +1,202 @@
+"""muP-aware optimizers: SGD(+momentum), Adam, AdamW, Adagrad.
+
+The paper's central practical artifact (besides init) is the per-tensor
+learning-rate scaling of Tables 3/8/9.  Here the optimizer receives the meta
+pytree and resolves, per tensor,
+
+    effective_lr = master_lr * schedule(t) * rule.lr_mult(adam_like) * meta.lr_scale
+
+Weight decay is decoupled (AdamW-style) and applied with the *master* LR so
+it stays width-independent (App. B.3: "weight decay should be scaled
+independently of width"; plain-Adam L2 is incompatible with muP and is not
+offered).  Optional ``eps`` scaling per App. B.3 ("eps ... needs to be scaled
+like 1/fan_in if added after the square root").
+
+No optax dependency — state is a plain pytree so it checkpoints trivially.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.meta import ParamMeta, tree_map_with_meta
+from repro.core.parametrization import Parametrization
+
+Schedule = Callable[[jax.Array], jax.Array]  # step -> multiplicative factor
+
+
+def _lr_mults(meta: Any, parametrization: Parametrization, adam_like: bool) -> Any:
+    """Static per-tensor LR multipliers resolved from the abc rules."""
+
+    def one(m: ParamMeta) -> float:
+        return m.rule(parametrization).lr_mult(adam_like) * m.lr_scale
+
+    return jax.tree_util.tree_map(
+        one, meta, is_leaf=lambda x: isinstance(x, ParamMeta)
+    )
+
+
+def _eps_mults(meta: Any, parametrization: Parametrization, scale_eps: bool) -> Any:
+    def one(m: ParamMeta) -> float:
+        if not scale_eps or not parametrization.is_mup:
+            return 1.0
+        # eps added after sqrt scales like 1/width_mult for width-fan-in
+        return 1.0 / m.infshape.width_mult
+
+    return jax.tree_util.tree_map(
+        one, meta, is_leaf=lambda x: isinstance(x, ParamMeta)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """A purely-functional optimizer; `update` returns *deltas* to add."""
+
+    kind: str
+    lr: float
+    lr_mults: Any                      # pytree of floats (static per tensor)
+    eps_mults: Any
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    momentum: float = 0.0
+    weight_decay: float = 0.0
+    schedule: Optional[Schedule] = None
+    grad_dtype: Any = jnp.float32      # cast grads before moments (master prec)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def create(
+        kind: str,
+        lr: float,
+        parametrization: Parametrization,
+        meta: Any,
+        b1: float = 0.9,
+        b2: float = 0.999,
+        eps: float = 1e-8,
+        momentum: float = 0.0,
+        weight_decay: float = 0.0,
+        schedule: Optional[Schedule] = None,
+        mup_scale_eps: bool = False,
+    ) -> "Optimizer":
+        kind = kind.lower()
+        if kind not in ("sgd", "adam", "adamw", "adagrad"):
+            raise ValueError(f"unknown optimizer {kind!r}")
+        adam_like = kind in ("adam", "adamw", "adagrad")
+        if kind == "adam" and weight_decay:
+            raise ValueError(
+                "L2 weight decay under plain Adam is not muP-compatible "
+                "(App. B.3); use adamw."
+            )
+        return Optimizer(
+            kind=kind,
+            lr=lr,
+            lr_mults=_lr_mults(meta, parametrization, adam_like),
+            eps_mults=_eps_mults(meta, parametrization, mup_scale_eps),
+            b1=b1,
+            b2=b2,
+            eps=eps,
+            momentum=momentum,
+            weight_decay=weight_decay,
+            schedule=schedule,
+        )
+
+    # ------------------------------------------------------------------
+    def init(self, params: Any) -> Any:
+        zeros = lambda p: jnp.zeros_like(p, dtype=self.grad_dtype)
+        state = {"count": jnp.zeros((), jnp.int32)}
+        if self.kind == "sgd":
+            if self.momentum:
+                state["mu"] = jax.tree_util.tree_map(zeros, params)
+        elif self.kind == "adagrad":
+            state["nu"] = jax.tree_util.tree_map(zeros, params)
+        else:  # adam / adamw
+            state["mu"] = jax.tree_util.tree_map(zeros, params)
+            state["nu"] = jax.tree_util.tree_map(zeros, params)
+        return state
+
+    def _sched(self, count: jax.Array) -> jax.Array:
+        return self.schedule(count) if self.schedule is not None else jnp.float32(1.0)
+
+    def update(self, grads: Any, state: Any, params: Any) -> tuple:
+        """Returns (updates, new_state); apply with params + updates."""
+        count = state["count"] + 1
+        sched = self._sched(state["count"]).astype(jnp.float32)
+        new_state = {"count": count}
+        g32 = jax.tree_util.tree_map(
+            lambda g: g.astype(self.grad_dtype), grads
+        )
+
+        if self.kind == "sgd":
+            if self.momentum:
+                mu = jax.tree_util.tree_map(
+                    lambda m, g: self.momentum * m + g, state["mu"], g32
+                )
+                new_state["mu"] = mu
+                eff = mu
+            else:
+                eff = g32
+
+            def upd(g, lr_mult, p):
+                step = -self.lr * sched * lr_mult * g
+                if self.weight_decay:
+                    step = step - self.lr * sched * self.weight_decay * p
+                return step.astype(p.dtype)
+
+            updates = jax.tree_util.tree_map(upd, eff, self.lr_mults, params)
+            return updates, new_state
+
+        if self.kind == "adagrad":
+            nu = jax.tree_util.tree_map(
+                lambda v, g: v + g * g, state["nu"], g32
+            )
+            new_state["nu"] = nu
+
+            def upd(g, v, lr_mult, em, p):
+                step = -self.lr * sched * lr_mult * g / (
+                    jnp.sqrt(v) + self.eps * em
+                )
+                if self.weight_decay:
+                    step = step - self.lr * sched * self.weight_decay * p
+                return step.astype(p.dtype)
+
+            updates = jax.tree_util.tree_map(
+                upd, g32, nu, self.lr_mults, self.eps_mults, params
+            )
+            return updates, new_state
+
+        # adam / adamw
+        mu = jax.tree_util.tree_map(
+            lambda m, g: self.b1 * m + (1 - self.b1) * g, state["mu"], g32
+        )
+        nu = jax.tree_util.tree_map(
+            lambda v, g: self.b2 * v + (1 - self.b2) * g * g, state["nu"], g32
+        )
+        new_state["mu"] = mu
+        new_state["nu"] = nu
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - self.b1**c
+        bc2 = 1.0 - self.b2**c
+
+        def upd(m, v, lr_mult, em, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            step = -self.lr * sched * lr_mult * mhat / (
+                jnp.sqrt(vhat) + self.eps * em
+            )
+            if self.kind == "adamw" and self.weight_decay:
+                # decoupled, master-LR-scaled: width-independent
+                step = step - self.lr * sched * self.weight_decay * p
+            return step.astype(p.dtype)
+
+        updates = jax.tree_util.tree_map(
+            upd, mu, nu, self.lr_mults, self.eps_mults, params
+        )
+        return updates, new_state
+
+
+def apply_updates(params: Any, updates: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)

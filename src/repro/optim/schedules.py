@@ -1,0 +1,70 @@
+"""LR schedules — the Fig. 4 set: constant, linear, cosine, step, inv-sqrt.
+
+All return a multiplicative factor of the master LR as a function of step,
+so the schedule *shape* is a muTransferable HP (Table 2) while total steps is
+a transferred-across HP (Table 1).
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence, Tuple
+
+import jax.numpy as jnp
+
+
+def constant() -> Callable:
+    return lambda step: jnp.float32(1.0)
+
+
+def warmup_factor(step, warmup_steps: int):
+    if warmup_steps <= 0:
+        return jnp.float32(1.0)
+    return jnp.minimum(1.0, (step + 1) / warmup_steps)
+
+
+def linear_decay(total_steps: int, warmup_steps: int = 0, end_factor: float = 0.0) -> Callable:
+    def f(step):
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return warmup_factor(step, warmup_steps) * ((1 - t) + t * end_factor)
+
+    return f
+
+
+def cosine(total_steps: int, warmup_steps: int = 0, end_factor: float = 0.0) -> Callable:
+    def f(step):
+        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return warmup_factor(step, warmup_steps) * (end_factor + (1 - end_factor) * c)
+
+    return f
+
+
+def step_decay(milestones: Sequence[int], gamma: float = 0.1) -> Callable:
+    ms = jnp.asarray(tuple(milestones), jnp.int32)
+
+    def f(step):
+        k = jnp.sum(step >= ms)
+        return jnp.float32(gamma) ** k
+
+    return f
+
+
+def inv_sqrt(warmup_steps: int = 1000) -> Callable:
+    def f(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        w = jnp.float32(max(warmup_steps, 1))
+        return jnp.minimum(s / w, jnp.sqrt(w / s))
+
+    return f
+
+
+SCHEDULES = {
+    "constant": constant,
+    "linear": linear_decay,
+    "cosine": cosine,
+    "step": step_decay,
+    "inv_sqrt": inv_sqrt,
+}
+
+
+def make_schedule(name: str, **kw) -> Callable:
+    return SCHEDULES[name](**kw)

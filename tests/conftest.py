@@ -1,0 +1,9 @@
+import os
+import sys
+
+# allow `pytest tests/` without PYTHONPATH=src
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# keep tests single-device (the dry-run alone uses 512 fake devices, in its
+# own process); also keep XLA from grabbing every core for compilation
+os.environ.setdefault("XLA_FLAGS", "")

@@ -1,0 +1,110 @@
+"""Chunked attention and KV-cache invariants (hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import attention as A
+
+
+def _qkv(B, S, H, K, d, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (
+        jax.random.normal(ks[0], (B, S, H, d)),
+        jax.random.normal(ks[1], (B, S, K, d)),
+        jax.random.normal(ks[2], (B, S, K, d)),
+    )
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    nchunks=st.integers(2, 4),
+    chunk=st.sampled_from([16, 32]),
+    K=st.sampled_from([1, 2]),
+    window=st.sampled_from([0, 8, 24]),
+    unroll=st.booleans(),
+    seed=st.integers(0, 3),
+)
+def test_chunked_equals_dense(B, nchunks, chunk, K, window, unroll, seed):
+    S = nchunks * chunk
+    H, d = 2 * K, 8
+    q, k, v = _qkv(B, S, H, K, d, seed)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    dense = A.attend(q, k, v, A.make_mask(pos, pos, True, window), 0.125)
+    chunked = A.attend_chunked(
+        q, k, v, pos, pos, 0.125, causal=True, window=window,
+        chunk=chunk, unroll=unroll,
+    )
+    np.testing.assert_allclose(
+        np.asarray(chunked), np.asarray(dense), atol=2e-5
+    )
+
+
+def test_windowed_band_excludes_far_tokens():
+    """A token far outside the window must have zero influence."""
+    B, S, H, K, d, w = 1, 64, 2, 2, 8, 8
+    q, k, v = _qkv(B, S, H, K, d)
+    v2 = v.at[0, 0].set(1e4)  # poison token 0
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    out1 = A.attend_chunked(q, k, v, pos, pos, 0.125, True, w, chunk=16)
+    out2 = A.attend_chunked(q, k, v2, pos, pos, 0.125, True, w, chunk=16)
+    # queries at positions >= w cannot see token 0
+    np.testing.assert_allclose(
+        np.asarray(out1[0, w:]), np.asarray(out2[0, w:]), atol=1e-5
+    )
+    # but query 0 sees itself
+    assert float(jnp.max(jnp.abs(out1[0, 0] - out2[0, 0]))) > 1.0
+
+
+class TestKVCache:
+    def test_ring_buffer_wraps(self):
+        cache = A.init_kv_cache(1, 4, 1, 2, jnp.float32)
+        for p in range(6):
+            kv = jnp.full((1, 1, 1, 2), float(p))
+            pos = jnp.array([[p]], jnp.int32)
+            cache = A.cache_write(cache, kv, kv, pos, windowed=True)
+        # slots hold positions 2..5 (4-entry ring over 6 writes)
+        assert sorted(np.asarray(cache["pos"][0]).tolist()) == [2, 3, 4, 5]
+
+    def test_mask_respects_empty_slots(self):
+        q_pos = jnp.array([[3]], jnp.int32)
+        kv_pos = jnp.array([[0, 1, -1, -1]], jnp.int32)
+        m = A.make_mask(q_pos, kv_pos, causal=True)
+        assert np.asarray(m[0, 0]).tolist() == [True, True, False, False]
+
+    def test_prefill_cache_matches_manual_writes(self):
+        B, S, K, d = 2, 6, 1, 4
+        k = jax.random.normal(jax.random.PRNGKey(0), (B, S, K, d))
+        v = jax.random.normal(jax.random.PRNGKey(1), (B, S, K, d))
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        pre = A.cache_from_prefill(k, v, pos, 8, windowed=False,
+                                   dtype=jnp.float32)
+        manual = A.init_kv_cache(B, 8, K, d, jnp.float32)
+        for t in range(S):
+            manual = A.cache_write(
+                manual, k[:, t:t+1], v[:, t:t+1], pos[:, t:t+1], False
+            )
+        for key in ("k", "v", "pos"):
+            np.testing.assert_allclose(
+                np.asarray(pre[key]), np.asarray(manual[key]), atol=1e-6
+            )
+
+    def test_windowed_prefill_keeps_last_window(self):
+        B, S, K, d, w = 1, 10, 1, 2, 4
+        k = jnp.arange(S, dtype=jnp.float32).reshape(1, S, 1, 1)
+        k = jnp.broadcast_to(k, (1, S, 1, 2))
+        pos = jnp.arange(S, dtype=jnp.int32)[None]
+        cache = A.cache_from_prefill(k, k, pos, w, windowed=True,
+                                     dtype=jnp.float32)
+        assert sorted(np.asarray(cache["pos"][0]).tolist()) == [6, 7, 8, 9]
+
+
+def test_bf16_acc_close_to_f32():
+    q, k, v = _qkv(2, 64, 4, 2, 32)
+    pos = jnp.broadcast_to(jnp.arange(64)[None], (2, 64))
+    mask = A.make_mask(pos, pos, True, 0)
+    a = A.attend(q, k, v, mask, 0.1, 0.0, jnp.float32)
+    b = A.attend(q, k, v, mask, 0.1, 0.0, jnp.bfloat16)
+    assert float(jnp.max(jnp.abs(a - b))) < 0.05

@@ -1,0 +1,75 @@
+"""InfShape bookkeeping property tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.infshape import InfDim, InfShape, make_infshape
+from repro.core.parametrization import Parametrization, Role, abc_rule, infer_role
+
+
+class TestInfDim:
+    def test_width_mult(self):
+        assert InfDim.inf(256, 64).width_mult == 4.0
+        assert InfDim.finite(100).width_mult == 1.0
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            InfDim(0, 4)
+
+
+class TestInfShape:
+    def test_fan_accessors(self):
+        ish = make_infshape((128, 8, 64), (32, 8, 64), (0,), (0,), (1, 2))
+        assert ish.fan_in == 128
+        assert ish.fan_out == 8 * 64
+        assert ish.width_mult == 4.0
+        assert ish.fan_out_mult == 1.0
+
+    def test_rank_mismatch(self):
+        with pytest.raises(ValueError):
+            make_infshape((4, 4), (4,), (0,))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from([64, 128, 256, 1024]),
+    base=st.sampled_from([32, 64, 128]),
+    p=st.sampled_from(list(Parametrization)),
+)
+def test_rule_invariants(n, base, p):
+    """Invariants that must hold for every parametrization and width:
+    positive stds/LRs, and muP's defining property — the *effective* output
+    scale (multiplier x init_std) decays at least as fast as SP's."""
+    hidden = make_infshape((n, n), (base, base), (0, 1), (0,), (1,))
+    out = make_infshape((n, 4), (base, 4), (0,), (0,), (1,))
+    for ish in (hidden, out):
+        r = abc_rule(p, ish)
+        assert r.init_std > 0
+        assert r.multiplier > 0
+        assert r.adam_lr_mult > 0 and r.sgd_lr_mult > 0
+    if p.is_mup:
+        # exact defining relation: effective output scale (mult x init_std)
+        # is SP's divided by sqrt(width_mult) — holds in all 3 formulations
+        # and in the reverse-transfer regime (width_mult < 1) too.
+        r = abc_rule(p, out)
+        s = abc_rule(Parametrization.SP, out)
+        nt = n / base
+        eff_mup = r.multiplier * r.init_std
+        eff_sp = s.multiplier * s.init_std
+        assert eff_mup == pytest.approx(eff_sp / nt**0.5, rel=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([64, 256]),
+    base=st.sampled_from([64, 128]),
+    p=st.sampled_from(
+        [Parametrization.MUP, Parametrization.MUP_TABLE3, Parametrization.MUP_TABLE9]
+    ),
+)
+def test_mup_hidden_effective_lr_scaling(n, base, p):
+    """Adam effective per-coordinate update of hidden weights ~ 1/width_mult
+    across all three formulations (after folding the multiplier)."""
+    hidden = make_infshape((n, n), (base, base), (0, 1), (0,), (1,))
+    r = abc_rule(p, hidden)
+    eff = r.multiplier * r.adam_lr_mult  # |delta(W*mult)| per Adam step
+    assert eff == pytest.approx(base / n, rel=1e-6)

@@ -1,0 +1,130 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
+shape/dtype sweeps and hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _qkv(B, S, T, H, K, d, dtype, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, d), dtype)
+    k = jax.random.normal(ks[1], (B, T, K, d), dtype)
+    v = jax.random.normal(ks[2], (B, T, K, d), dtype)
+    return q, k, v
+
+
+SHAPE_SWEEP = [
+    # B, S, H, K, d, causal, window, softcap
+    (1, 128, 4, 4, 64, True, 0, 0.0),
+    (2, 128, 4, 2, 64, True, 0, 0.0),       # GQA
+    (2, 256, 8, 1, 32, True, 0, 0.0),       # MQA
+    (1, 256, 4, 2, 64, True, 64, 0.0),      # sliding window
+    (1, 128, 4, 2, 128, True, 0, 50.0),     # gemma2 softcap
+    (1, 256, 2, 2, 64, True, 32, 30.0),     # window + softcap
+    (2, 128, 4, 4, 16, False, 0, 0.0),      # non-causal (encoder)
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", SHAPE_SWEEP)
+def test_flash_attention_matches_oracle(case, dtype):
+    B, S, H, K, d, causal, window, softcap = case
+    q, k, v = _qkv(B, S, S, H, K, d, dtype)
+    scale = 1.0 / d  # muP 1/d attention folded into the kernel scale
+    out = ops.attention(
+        q, k, v, scale=scale, causal=causal, window=window, softcap=softcap,
+        block_q=64, block_k=64, impl="interpret",
+    )
+    want = ref.attention_ref(
+        q, k, v, scale=scale, causal=causal, window=window, softcap=softcap
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=ATOL[dtype], rtol=1e-2,
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    B=st.integers(1, 2),
+    nq=st.integers(1, 3),
+    K=st.sampled_from([1, 2, 4]),
+    G=st.sampled_from([1, 2]),
+    d=st.sampled_from([16, 32, 64]),
+    window=st.sampled_from([0, 48]),
+    softcap=st.sampled_from([0.0, 20.0]),
+    seed=st.integers(0, 5),
+)
+def test_flash_attention_property(B, nq, K, G, d, window, softcap, seed):
+    S = 64 * nq
+    H = K * G
+    q, k, v = _qkv(B, S, S, H, K, d, jnp.float32, seed)
+    out = ops.attention(
+        q, k, v, scale=1.0 / d, causal=True, window=window, softcap=softcap,
+        block_q=64, block_k=64, impl="interpret",
+    )
+    want = ref.attention_ref(
+        q, k, v, scale=1.0 / d, causal=True, window=window, softcap=softcap
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+def test_attention_is_convex_combination():
+    """Property: each output row is a convex combination of v rows, so
+    max |out| <= max |v| — catches softmax/normalization bugs."""
+    q, k, v = _qkv(2, 128, 128, 4, 2, 32, jnp.float32)
+    out = ops.attention(
+        q, k, v, scale=0.1, causal=True, impl="interpret",
+        block_q=64, block_k=64,
+    )
+    assert float(jnp.max(jnp.abs(out))) <= float(jnp.max(jnp.abs(v))) + 1e-4
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("rows,D,block", [(37, 96, 16), (256, 64, 128), (8, 512, 8)])
+def test_rmsnorm_matches_oracle(rows, D, block, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(0), (rows, D), dtype)
+    g = (jax.random.normal(jax.random.PRNGKey(1), (D,)) * 0.1).astype(dtype)
+    out = ops.fused_rmsnorm(x, g, impl="interpret", block_rows=block)
+    want = ref.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=ATOL[dtype],
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(1, 70),
+    D=st.sampled_from([32, 128, 384]),
+    scale=st.floats(0.5, 100.0),  # below ~0.5 the eps term visibly breaks
+)                                  # exact invariance (eps/(c^2 var) term)
+def test_rmsnorm_scale_invariance(rows, D, scale):
+    """RMSNorm(c*x) ~= RMSNorm(x) for c > 0 — the kernel must preserve it."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (rows, D))
+    g = jnp.zeros((D,))
+    a = ops.fused_rmsnorm(x, g, impl="interpret", block_rows=16)
+    b = ops.fused_rmsnorm(x * scale, g, impl="interpret", block_rows=16)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3)
+
+
+def test_model_path_equals_kernel_path():
+    """The model's jnp attention (models/attention.attend) and the Pallas
+    kernel agree — so the TPU use_pallas switch is numerically safe."""
+    from repro.models import attention as A
+
+    q, k, v = _qkv(2, 128, 128, 4, 2, 64, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(128)[None], (2, 128))
+    mask = A.make_mask(pos, pos, True, 32)
+    a = A.attend(q, k, v, mask, 1.0 / 64, 50.0)
+    b = ops.attention(
+        q, k, v, scale=1.0 / 64, causal=True, window=32, softcap=50.0,
+        block_q=64, block_k=64, impl="interpret",
+    )
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

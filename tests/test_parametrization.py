@@ -1,0 +1,164 @@
+"""Core muP engine: abc rules, table equivalences, base-width compatibility."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.infshape import InfDim, InfShape, make_infshape
+from repro.core.parametrization import (
+    AbcRule,
+    Parametrization,
+    Role,
+    abc_rule,
+    attention_scale,
+    infer_role,
+    lemma_j1_rescale,
+)
+from repro.data.pipeline import make_pipeline
+from repro.models.model import build_model
+from repro.optim.optimizer import Optimizer, apply_updates
+
+MUPS = [Parametrization.MUP, Parametrization.MUP_TABLE3, Parametrization.MUP_TABLE9]
+
+
+def hidden_shape(n, base):
+    return make_infshape((n, n), (base, base), (0, 1), (0,), (1,))
+
+
+def input_shape(n, base, d_in=10):
+    return make_infshape((d_in, n), (d_in, base), (1,), (0,), (1,))
+
+
+def output_shape(n, base, d_out=10):
+    return make_infshape((n, d_out), (base, d_out), (0,), (0,), (1,))
+
+
+class TestRoles:
+    def test_infer(self):
+        assert infer_role(hidden_shape(256, 64)) == Role.HIDDEN
+        assert infer_role(input_shape(256, 64)) == Role.INPUT
+        assert infer_role(output_shape(256, 64)) == Role.OUTPUT
+        fin = make_infshape((8, 8), (8, 8), (), (0,), (1,))
+        assert infer_role(fin) == Role.SCALAR
+
+
+class TestTableScaling:
+    """The purple entries of Table 3/8: widthwise scaling exponents."""
+
+    def test_hidden_adam_lr_scales_inverse_width(self):
+        for p in MUPS:
+            r64 = abc_rule(p, hidden_shape(64, 64))
+            r512 = abc_rule(p, hidden_shape(512, 64))
+            assert r512.adam_lr_mult == pytest.approx(r64.adam_lr_mult / 8)
+
+    def test_hidden_init_var_inverse_fan_in(self):
+        for p in list(MUPS) + [Parametrization.SP]:
+            r64 = abc_rule(p, hidden_shape(64, 64))
+            r256 = abc_rule(p, hidden_shape(256, 64))
+            assert r256.init_std == pytest.approx(r64.init_std / 2)
+
+    def test_output_effective_scale_shrinks(self):
+        # effective output scale (mult * init_std) ~ 1/n in muP vs 1/sqrt(n)
+        # in SP: ratio mup/sp ~ 1/sqrt(width_mult)
+        for p in MUPS:
+            r = abc_rule(p, output_shape(1024, 64))
+            s = abc_rule(Parametrization.SP, output_shape(1024, 64))
+            eff_mup = r.multiplier * r.init_std
+            eff_sp = s.multiplier * s.init_std
+            assert eff_mup / eff_sp == pytest.approx(1 / 4.0)  # 1/sqrt(16)
+
+    def test_all_tables_identity_at_base(self):
+        # at the base shape every rule reduces to SP (Eq. 4 with n == n0)
+        sp = abc_rule(Parametrization.SP, hidden_shape(64, 64))
+        for p in MUPS:
+            for mk in (hidden_shape, input_shape, output_shape):
+                r = abc_rule(p, mk(64, 64))
+                s = abc_rule(Parametrization.SP, mk(64, 64))
+                assert r.multiplier == pytest.approx(s.multiplier)
+                assert r.init_std == pytest.approx(s.init_std)
+                assert r.adam_lr_mult == pytest.approx(s.adam_lr_mult)
+                assert r.sgd_lr_mult == pytest.approx(s.sgd_lr_mult)
+        assert sp.multiplier == 1.0
+
+    def test_lemma_j1_roundtrip(self):
+        r = abc_rule(Parametrization.MUP, output_shape(512, 64))
+        r2 = lemma_j1_rescale(lemma_j1_rescale(r, 4.0, True), 0.25, True)
+        assert r2.multiplier == pytest.approx(r.multiplier)
+        assert r2.init_std == pytest.approx(r.init_std)
+        assert r2.adam_lr_mult == pytest.approx(r.adam_lr_mult)
+
+
+class TestAttentionScale:
+    def test_one_over_d(self):
+        # Definition 4.1: muP attention is 1/d, matching 1/sqrt(d) at base
+        s_base = attention_scale(Parametrization.MUP, 64, 64)
+        assert s_base == pytest.approx(1 / 8.0)
+        s_wide = attention_scale(Parametrization.MUP, 256, 64)
+        assert s_wide == pytest.approx((64**0.5) / 256)
+        # SP stays 1/sqrt(d)
+        assert attention_scale(Parametrization.SP, 256, 64) == pytest.approx(
+            1 / 16.0
+        )
+
+
+def _train_losses(cfg, p13n, optimizer="adam", steps=4, lr=1e-2, seed=0):
+    cfg = cfg.replace(
+        parametrization=p13n, dtype="float32", tie_embeddings=False
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = Optimizer.create(
+        optimizer, lr=lr, parametrization=model.p13n, meta=model.meta
+    )
+    state = opt.init(params)
+    pipe = make_pipeline(cfg.vocab_size, 32, 4, seed=seed)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, g = jax.value_and_grad(model.loss_fn)(params, batch)
+        updates, state = opt.update(g, state, params)
+        return apply_updates(params, updates), state, loss
+
+    losses = []
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    return losses
+
+
+class TestTableEquivalence:
+    """Lemma J.1: Tables 3/8/9 are the same parametrization — identical
+    training trajectories from the same seed, at any width."""
+
+    @pytest.mark.parametrize("optimizer", ["adam", "sgd"])
+    @pytest.mark.parametrize("width", [1.0, 2.0])
+    def test_tables_match(self, optimizer, width):
+        cfg = get_smoke_config("mup-gpt").scaled(width)
+        ref = _train_losses(cfg, "mup", optimizer)
+        for p in ("mup_table3", "mup_table9"):
+            other = _train_losses(cfg, p, optimizer)
+            for a, b in zip(ref, other):
+                assert a == pytest.approx(b, rel=2e-4), (p, ref, other)
+
+
+class TestBaseWidthCompat:
+    """Eq. 4 / App. H: muP == SP exactly at the base model shape."""
+
+    @pytest.mark.parametrize("optimizer", ["adam", "sgd"])
+    def test_mup_equals_sp_at_base(self, optimizer):
+        cfg = get_smoke_config("mup-gpt").replace(
+            zero_init_query=False, zero_init_readout=False
+        )
+        sp = _train_losses(cfg, "sp", optimizer)
+        mup = _train_losses(cfg, "mup", optimizer)
+        for a, b in zip(sp, mup):
+            assert a == pytest.approx(b, rel=1e-5)
+
+    def test_mup_differs_from_sp_when_wide(self):
+        cfg = get_smoke_config("mup-gpt").scaled(4.0).replace(
+            zero_init_query=False, zero_init_readout=False
+        )
+        sp = _train_losses(cfg, "sp")
+        mup = _train_losses(cfg, "mup")
+        assert any(abs(a - b) > 1e-6 for a, b in zip(sp, mup))

@@ -1,0 +1,104 @@
+"""Logical-axis sharding: spec resolution, divisibility fallbacks, and the
+per-config rule adaptation (small head counts, small expert counts)."""
+import subprocess
+import sys
+import os
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import sys
+    sys.path.insert(0, sys.argv[1])
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import make_rules, logical_to_spec
+    from repro.configs import get_config
+
+    mesh = jax.make_mesh((2, 8), ("data", "model"))
+
+    # 1. basic resolution
+    rules = make_rules(mesh, fsdp=True)
+    spec = logical_to_spec(mesh, rules, ("fsdp", "ffn"), (64, 128))
+    assert spec == P("data", "model"), spec
+
+    # 2. divisibility fallback: 15 heads cannot shard 8-way
+    spec = logical_to_spec(mesh, rules, ("fsdp", "heads", None), (64, 15, 64))
+    assert spec == P("data", None, None), spec
+
+    # 3. a mesh axis is used at most once per spec; ffn carries the fsdp
+    #    data axis by default, so experts->model leaves data for ffn
+    spec = logical_to_spec(mesh, rules, ("experts", "ffn"), (16, 128))
+    assert spec == P("model", "data"), spec
+
+    # 4. mixtral-style (8 experts on 8-way model axis): experts take model,
+    #    ffn keeps the data leg
+    spec = logical_to_spec(mesh, rules, ("experts", None, "ffn"),
+                           (8, 64, 128))
+    assert spec == P("model", None, "data"), spec
+
+    # 5a. per-arch policy: smollm is parallelism="dp" -> pure ZeRO-DP rules
+    cfg = get_config("smollm-360m")
+    r = make_rules(mesh, cfg=cfg)
+    assert r.rules["batch"] == ("data", "model")
+    assert r.rules["ffn"] is None and r.rules["heads"] is None
+
+    # 5b. head_dim TP is decode-only (QK^T contraction dim in training!)
+    cfg = get_config("mixtral-8x22b")       # kv=8 does not divide 8? it does;
+    cfg = cfg.replace(n_kv_heads=3)         # force the non-divisible case
+    r_train = make_rules(mesh, cfg=cfg, kind="train")
+    assert r_train.rules["kv_heads"] is None
+    assert r_train.rules["head_dim"] is None
+    r_dec = make_rules(mesh, cfg=cfg, kind="decode")
+    assert r_dec.rules["head_dim"] == "model"   # d_head 128 % 8 == 0
+
+    # 6. gemma2-27b: 32 heads shard fine on 8
+    cfg = get_config("gemma2-27b")
+    r = make_rules(mesh, cfg=cfg)
+    assert r.rules["heads"] == "model"
+
+    # 7. batch axes with a pod dimension
+    mesh3 = jax.make_mesh((2, 2, 4), ("pod", "data", "model"))
+    r3 = make_rules(mesh3)
+    spec = logical_to_spec(mesh3, r3, ("batch", None), (8, 128))
+    assert spec == P(("pod", "data"), None), spec
+
+    print("SHARDING_OK")
+    """
+)
+
+
+def test_sharding_rules_and_fallbacks():
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, src],
+        capture_output=True, text=True, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "SHARDING_OK" in out.stdout
+
+
+def test_shard_is_identity_without_context():
+    import jax.numpy as jnp
+    from repro.distributed.sharding import shard
+
+    x = jnp.ones((4, 8))
+    y = shard(x, "batch", None)
+    assert (x == y).all()
+
+
+def test_shard_rejects_rank_mismatch():
+    import jax.numpy as jnp
+    from repro.distributed.sharding import (
+        ShardingRules, shard, shardings,
+    )
+    import jax
+
+    mesh = jax.make_mesh((1,), ("data",))
+    rules = ShardingRules(rules={"batch": "data"})
+    with shardings(mesh, rules):
+        with pytest.raises(ValueError):
+            shard(jnp.ones((4, 8)), "batch")

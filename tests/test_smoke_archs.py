@@ -1,0 +1,102 @@
+"""Per-arch smoke tests (deliverable f): reduced config of each assigned
+architecture — one forward + one train step on CPU, asserting output shapes
+and no NaNs; plus decode == full-forward consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.models.model import build_model
+from repro.optim.optimizer import Optimizer, apply_updates
+
+ARCHS = [a for a in list_archs()]
+
+
+def _batch(cfg, B=2, S=16, seed=1):
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.n_image_tokens:
+        batch["images"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.n_image_tokens, cfg.frontend_feat_dim)
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2), (B, cfg.encoder_seq, cfg.frontend_feat_dim)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_no_nan(self, arch):
+        cfg = get_smoke_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = _batch(cfg)
+        logits, _ = model.forward(params, batch["tokens"], memory_inputs=batch)
+        B, S = batch["tokens"].shape
+        assert logits.shape == (B, S, cfg.vocab_size)
+        assert not bool(jnp.isnan(logits).any())
+
+    def test_one_train_step(self, arch):
+        cfg = get_smoke_config(arch, dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = Optimizer.create(
+            "adamw", lr=1e-3, parametrization=model.p13n, meta=model.meta,
+            weight_decay=0.01,
+        )
+        state = opt.init(params)
+        batch = _batch(cfg)
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        assert jnp.isfinite(loss)
+        updates, state = opt.update(grads, state, params)
+        new_params = apply_updates(params, updates)
+        # params actually moved, no NaNs anywhere
+        moved = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params
+        )
+        assert max(jax.tree_util.tree_leaves(moved)) > 0
+        for leaf in jax.tree_util.tree_leaves(new_params):
+            assert not bool(jnp.isnan(leaf).any())
+
+    def test_decode_matches_forward(self, arch):
+        cfg = get_smoke_config(arch, dtype="float32")
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        B, S = 2, 12
+        batch = _batch(cfg, B=B, S=S)
+        tokens = batch["tokens"]
+        tok_full = jnp.concatenate([tokens, tokens[:, :1]], axis=1)
+        ref, _ = model.forward(params, tok_full, memory_inputs=batch)
+        _, cache = model.prefill(
+            params, tokens, memory_inputs=batch, cache_len=S + 4
+        )
+        pos = jnp.full((B, 1), S, jnp.int32)
+        dec, _ = model.decode_step(params, tokens[:, :1], pos, cache)
+        scale = float(jnp.max(jnp.abs(ref))) + 1e-9
+        err = float(jnp.max(jnp.abs(dec[:, 0] - ref[:, S]))) / scale
+        assert err < 1e-4, err
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_instantiates(arch):
+    """The FULL configs are exercised via the dry-run; here we only check
+    they construct and decompose into their layer patterns."""
+    cfg = get_config(arch)
+    assert cfg.n_groups * len(cfg.pattern) + len(cfg.tail) == cfg.n_layers
+    assert cfg.param_count() > 0
+    assert cfg.active_param_count() <= cfg.param_count()
+
+
+def test_param_counts_are_plausible():
+    # ballpark sanity vs published sizes (within 2x — exact embeddings/glu
+    # accounting differs between papers)
+    expect = {
+        "gemma2-27b": 27e9, "gemma2-2b": 2.6e9, "smollm-360m": 360e6,
+        "smollm-135m": 135e6, "mamba2-130m": 130e6, "whisper-small": 240e6,
+        "mixtral-8x22b": 141e9, "llama-3.2-vision-90b": 88e9,
+    }
+    for arch, n in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.4 * n < got < 2.5 * n, (arch, got, n)

@@ -1,0 +1,62 @@
+"""muTransfer workflow: proxy construction, HP taxonomy, reverse transfer."""
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.core.transfer import (
+    HParams,
+    MU_TRANSFERABLE,
+    NOT_TRANSFERABLE,
+    make_proxy,
+    reverse_transfer,
+    transfer,
+)
+
+
+class TestMakeProxy:
+    def test_width_shrinks_base_preserved(self):
+        target = get_config("gemma2-2b")
+        proxy = make_proxy(target, width_factor=0.125)
+        assert proxy.d_model < target.d_model
+        # SAME muP base shape => HPs transfer by copy
+        assert proxy.base_d_model == target.base_d_model
+        assert proxy.base_d_ff == target.base_d_ff
+
+    def test_min_d_head_enforced(self):
+        target = get_config("smollm-135m")  # d_head 64
+        proxy = make_proxy(target, width_factor=0.125, min_d_head=32)
+        assert proxy.d_head >= 32  # App. D.4
+
+    def test_depth_shrink_keeps_pattern(self):
+        target = get_config("gemma2-2b")  # pattern (local, attn) x13
+        proxy = make_proxy(target, width_factor=0.25, depth=4)
+        assert proxy.pattern == target.pattern
+        assert proxy.n_layers == 4
+
+    def test_proxy_is_much_smaller(self):
+        target = get_config("gemma2-2b")
+        proxy = make_proxy(target, width_factor=0.125)
+        assert proxy.param_count() < target.param_count() / 10
+
+
+class TestTaxonomy:
+    def test_sets_disjoint(self):
+        assert not (MU_TRANSFERABLE & NOT_TRANSFERABLE)
+
+    def test_transfer_copies(self):
+        hp = HParams(lr=0.02, sigma=2.0, alpha_output=4.0)
+        out = transfer(hp, get_smoke_config("mup-gpt"))
+        assert out["optim"]["lr"] == 0.02
+        assert out["model"]["sigma"] == 2.0
+        assert out["model"]["alpha_output"] == 4.0
+
+
+class TestReverseTransfer:
+    def test_simulated_width(self):
+        """App. I: a narrow model with the wide model's base shape replicates
+        the wide model's effective parametrization."""
+        wide = get_smoke_config("mup-gpt").scaled(8.0).as_base()
+        narrow = reverse_transfer(HParams(), wide, narrow_width=64)
+        assert narrow.d_model < wide.d_model
+        assert narrow.base_d_model == wide.d_model  # simulated width
+        # width_mult < 1: the narrow model "pretends" to be wide
+        assert narrow.width_mult < 1.0
