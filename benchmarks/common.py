@@ -50,6 +50,30 @@ def final_loss(losses: Sequence[float], tail: int = 5) -> float:
     return float(np.mean(seg)) if seg else float("inf")
 
 
+def batched_final_losses(
+    cfg, candidates, steps: int, batch_size: int = 8, seq_len: int = 64,
+    optimizer: str = "adam", schedule=None, seed: int = 0, tail: int = 5,
+    shared_init: bool = False,
+) -> List[float]:
+    """Train all HP candidates in one vmapped engine run; return the tail-mean
+    final loss per candidate (the Fig. 4 / Table 4 metric).
+
+    shared_init: every candidate starts from the identical init draw (one
+    key broadcast over the batch) — the controlled-sweep setting for grids
+    that vary only a multiplier."""
+    from repro.core.tuning import train_proxy_batched
+
+    rngs = None
+    if shared_init:
+        key = jax.random.PRNGKey(seed)
+        rngs = jnp.broadcast_to(key[None], (len(candidates),) + key.shape)
+    res = train_proxy_batched(
+        cfg, candidates, steps=steps, batch_size=batch_size, seq_len=seq_len,
+        seed=seed, optimizer=optimizer, schedule=schedule, rngs=rngs,
+    )
+    return [final_loss(list(res.curves[:, i]), tail) for i in range(len(candidates))]
+
+
 def optimum_shift_log2(
     curve_by_width: Dict[int, Dict[float, float]]
 ) -> float:

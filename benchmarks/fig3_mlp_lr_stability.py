@@ -7,6 +7,11 @@ CPU scale with widths 64 -> 4096 on synthetic 32-class classification:
 
     SP : best LR 2^0 @ w64 -> 2^-2 @ w4096; transferred 2^0 diverges.
     muP: best LR 2^0 at every width; loss weakly improves with width.
+
+The whole LR grid at each width trains as ONE vmapped batch through the
+sweep engine (core.tuning.batched_train): per-candidate LR is a traced
+scalar into Optimizer.update, so the 9-point grid costs one compile and one
+launch per width instead of nine.
 """
 from __future__ import annotations
 
@@ -14,10 +19,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import Timer, optimum_shift_log2, report
+from benchmarks.common import Timer, final_loss, optimum_shift_log2, report
+from repro.core.hp import stack_hparams
+from repro.core.init import init_params
 from repro.core.parametrization import Parametrization
+from repro.core.tuning import batched_train, grid_candidates
 from repro.models.mlp import build_mlp, synthetic_classification
-from repro.optim.optimizer import Optimizer, apply_updates
+from repro.optim.optimizer import Optimizer
 
 WIDTHS = (64, 512, 4096)
 BASE = 64
@@ -26,41 +34,47 @@ STEPS = 20
 N_CLASSES, D_IN, BATCH = 32, 64, 256
 
 
-def train_mlp(width, lr, p13n, seed=0):
-    params, meta, loss_fn = build_mlp(
-        D_IN, width, N_CLASSES, BASE, parametrization=p13n, seed=seed
-    )
-    opt = Optimizer.create(
-        "sgd", lr=lr, parametrization=Parametrization(p13n), meta=meta
-    )
-    state = opt.init(params)
+def _batches():
     data = synthetic_classification(8192, D_IN, N_CLASSES, seed=1)
-
-    @jax.jit
-    def step(params, state, batch):
-        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
-        updates, state = opt.update(g, state, params)
-        return apply_updates(params, updates), state, loss
-
-    losses = []
+    out = []
     for t in range(STEPS):
         i0 = (t * BATCH) % 8192
-        batch = {"x": data["x"][i0:i0 + BATCH], "y": data["y"][i0:i0 + BATCH]}
-        params, state, loss = step(params, state, batch)
-        losses.append(float(loss))
-    seg = [x for x in losses[-4:] if np.isfinite(x)]
-    return float(np.mean(seg)) if seg else float("inf")
+        out.append(
+            {"x": data["x"][i0:i0 + BATCH], "y": data["y"][i0:i0 + BATCH]}
+        )
+    return out
+
+
+def lr_curve(width, p13n, batches, seed=0):
+    """Final loss for every LR in LRS — one batched engine run."""
+    _, meta, mlp_loss = build_mlp(
+        D_IN, width, N_CLASSES, BASE, parametrization=p13n, seed=seed
+    )
+    p13n_e = Parametrization(p13n)
+    opt = Optimizer.create("sgd", lr=0.0, parametrization=p13n_e, meta=meta)
+    # every LR candidate shares the same init (the Fig. 3 controlled sweep)
+    key = jax.random.PRNGKey(seed)
+    rngs = jnp.broadcast_to(key[None], (len(LRS),) + key.shape)
+    out = batched_train(
+        init_fn=lambda rng, hp: init_params(rng, meta, p13n_e, sigma=hp.sigma),
+        loss_fn=lambda p, b, hp: mlp_loss(p, b)[0],
+        opt=opt,
+        hp_stack=stack_hparams(grid_candidates(lr=LRS)),
+        batches=batches,
+        rngs=rngs,
+    )
+    return {
+        lr: final_loss(list(out["curves"][:, i]), tail=4)
+        for i, lr in enumerate(LRS)
+    }
 
 
 def run():
     t = Timer()
+    batches = _batches()
     results = {}
     for p13n in ("sp", "mup"):
-        curve = {w: {} for w in WIDTHS}
-        for w in WIDTHS:
-            for lr in LRS:
-                curve[w][lr] = train_mlp(w, lr, p13n)
-        results[p13n] = curve
+        results[p13n] = {w: lr_curve(w, p13n, batches) for w in WIDTHS}
     shift_sp = optimum_shift_log2(results["sp"])
     shift_mup = optimum_shift_log2(results["mup"])
     small, big = WIDTHS[0], WIDTHS[-1]

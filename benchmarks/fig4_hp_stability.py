@@ -1,13 +1,18 @@
 """Fig. 4: stability of other muTransferable HPs across width in muP —
-output multiplier alpha_output, init sigma, and LR schedule ranking."""
+output multiplier alpha_output, init sigma, and LR schedule ranking.
+
+Each HP grid at each width trains as ONE vmapped batch through the sweep
+engine: alpha_output rides the forward pass and sigma rides the init as
+traced per-candidate scalars, so a 7-point grid is one compile + one launch
+instead of seven serial runs.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (
-    Timer, final_loss, optimum_shift_log2, report, train_transformer,
-)
+from benchmarks.common import Timer, batched_final_losses, optimum_shift_log2, report
 from repro.configs import get_smoke_config
+from repro.core.tuning import config_hparams, grid_candidates
 from repro.optim import schedules as sched_lib
 
 WIDTH_FACTORS = (1.0, 4.0)
@@ -16,14 +21,21 @@ LR = 2e-3
 
 
 def _sweep(base, field, values):
+    """curve[width][value] = final loss — one engine run per width.
+
+    shared_init: every grid point starts from the identical init draw, so
+    the curve isolates the swept HP (the controlled Fig. 4 comparison).
+    Unswept HPs keep the config's baked values via config_hparams."""
     out = {}
     for f in WIDTH_FACTORS:
         cfg0 = base.scaled(f)
-        w = cfg0.d_model
-        out[w] = {
-            v: final_loss(train_transformer(cfg0.replace(**{field: v}), LR, STEPS))
-            for v in values
-        }
+        candidates = grid_candidates(
+            base=config_hparams(cfg0, LR), **{field: values}
+        )
+        finals = batched_final_losses(
+            cfg0, candidates, steps=STEPS, optimizer="adam", shared_init=True
+        )
+        out[cfg0.d_model] = {v: finals[i] for i, v in enumerate(values)}
     return out
 
 
@@ -33,7 +45,9 @@ def run():
     alpha_curve = _sweep(base, "alpha_output", tuple(2.0**z for z in range(-3, 4, 2)))
     sigma_curve = _sweep(base, "sigma", tuple(2.0**z for z in range(-3, 3)))
 
-    # schedule *ranking* stability across widths
+    # schedule *ranking* stability across widths (schedule shape is
+    # structural — not a traced scalar — so schedules run one engine call
+    # each, with the single candidate's lr/sigma threaded as usual)
     scheds = {
         "constant": sched_lib.make_schedule("constant"),
         "linear": sched_lib.make_schedule("linear", total_steps=STEPS),
@@ -44,7 +58,10 @@ def run():
     for f in WIDTH_FACTORS:
         cfg = base.scaled(f)
         losses = {
-            name: final_loss(train_transformer(cfg, LR, STEPS, schedule=s))
+            name: batched_final_losses(
+                cfg, [config_hparams(cfg, LR)], steps=STEPS,
+                optimizer="adam", schedule=s,
+            )[0]
             for name, s in scheds.items()
         }
         sched_rank[cfg.d_model] = sorted(losses, key=losses.get)

@@ -21,6 +21,7 @@ def main() -> None:
         fig4_hp_stability,
         fig5_coord_check,
         fig7_wider_is_better,
+        perf_sweep,
         roofline,
         table4_mutransfer_vs_direct,
     )
@@ -32,6 +33,7 @@ def main() -> None:
         "fig5": fig5_coord_check,
         "fig7": fig7_wider_is_better,
         "table4": table4_mutransfer_vs_direct,
+        "perf_sweep": perf_sweep,
         "roofline": roofline,
     }
     failures = 0

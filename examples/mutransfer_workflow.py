@@ -1,7 +1,8 @@
 """muTransfer end-to-end (Algorithm 1):
 
   1. take the target config (muP-parametrized),
-  2. random-search HPs on a 4x-narrower PROXY,
+  2. random-search HPs on a 4x-narrower PROXY — all samples train
+     SIMULTANEOUSLY through the vmap-batched sweep engine,
   3. zero-shot copy the winner to the TARGET and train it,
   4. compare against the target trained with a deliberately bad LR.
 
@@ -21,6 +22,8 @@ def main():
     print(f"target: d_model={target.d_model}  proxy: d_model={proxy.d_model}")
 
     # --- step 2: tune the proxy (cheap!) --------------------------------
+    # random_search is batched by default: the 6 samples train as one
+    # vmapped run (per-candidate lr/sigma/alpha_* as traced scalars)
     space = SearchSpace(
         lr=tuple(5e-3 * 2.0**z for z in np.arange(-2, 3.0, 1.0)),
         sigma=(0.5, 1.0), alpha_output=(0.5, 1.0, 2.0),

@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""Docs link check: every relative link / path reference in the repo's
+markdown docs must point at a file that exists.
+
+Usage:  python scripts/check_doc_links.py [README.md docs/*.md ...]
+(defaults to README.md and docs/*.md).  Exits non-zero on dangling links.
+External (http/https/mailto) links are not fetched — CI is offline-safe.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#]+)(?:#[^)]*)?\)")
+CODEPATH_RE = re.compile(r"`((?:src|docs|tests|benchmarks|examples|scripts)/[\w./-]+)`")
+
+
+def check(md_path: str) -> list:
+    root = os.path.dirname(os.path.abspath(md_path))
+    repo = os.path.dirname(os.path.abspath(__file__))
+    repo = os.path.dirname(repo)
+    text = open(md_path, encoding="utf-8").read()
+    bad = []
+    targets = set()
+    for m in LINK_RE.finditer(text):
+        t = m.group(1).strip()
+        if t.startswith(("http://", "https://", "mailto:")):
+            continue
+        targets.add((t, os.path.normpath(os.path.join(root, t))))
+    for m in CODEPATH_RE.finditer(text):
+        t = m.group(1)
+        targets.add((t, os.path.join(repo, t)))
+    for label, path in sorted(targets):
+        if not os.path.exists(path):
+            bad.append((md_path, label))
+    return bad
+
+
+def main(argv) -> int:
+    files = argv or ["README.md", *glob.glob("docs/*.md")]
+    bad = []
+    for f in files:
+        bad.extend(check(f))
+    for src, target in bad:
+        print(f"DANGLING {src}: {target}")
+    print(f"checked {len(files)} file(s): "
+          f"{'FAIL' if bad else 'OK'} ({len(bad)} dangling)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

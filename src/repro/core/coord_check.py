@@ -1,4 +1,4 @@
-"""Coordinate checking (App. D.1, Fig. 5).
+"""Coordinate checking (App. D.1, Fig. 5) — vectorized over HP candidates.
 
 Verifies a muP implementation: train a family of models differing only in
 width for a few steps; record the average coordinate size (mean |x|, and the
@@ -6,8 +6,16 @@ std of x_t - x_0) of every logged activation vector.  Under muP these stay
 Theta(1) as width grows; under SP, logits and attention logits blow up.
 
 The harness is model-agnostic: it takes a ``make_model(width)`` factory
-returning (params, meta, loss_fn) where ``loss_fn(params, batch, rng)``
-returns ``(loss, acts)`` with ``acts`` a dict of named activation arrays.
+returning (params, meta, loss_fn) where ``loss_fn(params, batch)`` returns
+``(loss, acts)`` with ``acts`` a dict of named activation arrays.
+
+Widths cannot share a trace (shapes differ), but *HP candidates* at a fixed
+width can: :func:`coord_check_batched` trains N learning rates
+simultaneously via ``jax.vmap`` over stacked (params, opt state) — one
+compiled step per width covers the whole LR sweep, with the coordinate
+statistics reduced inside the trace so the batched activations never
+materialize on the host.  :func:`coord_check` is the single-candidate view
+of the same engine.
 """
 from __future__ import annotations
 
@@ -16,9 +24,10 @@ from typing import Any, Callable, Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.parametrization import Parametrization
-from repro.optim.optimizer import Optimizer
+from repro.optim.optimizer import Optimizer, apply_updates
 
 
 @dataclasses.dataclass
@@ -38,15 +47,117 @@ class CoordCheckResult:
             recs = self.records[w]
             step = recs[t if t >= 0 else len(recs) + t]
             ys.append(max(step[act_name], 1e-30))
-        xs = jnp.log2(jnp.asarray(widths, jnp.float64))
-        ly = jnp.log2(jnp.asarray(ys, jnp.float64))
-        xbar, ybar = xs.mean(), ly.mean()
-        denom = ((xs - xbar) ** 2).sum()
-        return float(((xs - xbar) * (ly - ybar)).sum() / denom)
+        return _loglog_slope(widths, ys)
+
+
+@dataclasses.dataclass
+class BatchedCoordCheckResult:
+    """Coord-check records for N HP candidates trained simultaneously.
+
+    records[width][t][act_name] is an ``(N,)`` array — one value per
+    candidate.  ``lrs`` names the candidate axis.
+    """
+
+    lrs: Sequence[float]
+    records: Dict[int, List[Dict[str, np.ndarray]]]
+
+    def growth(self, act_name: str, candidate: int = 0, t: int = -1) -> float:
+        widths = sorted(self.records)
+        ys = []
+        for w in widths:
+            recs = self.records[w]
+            step = recs[t if t >= 0 else len(recs) + t]
+            ys.append(max(float(step[act_name][candidate]), 1e-30))
+        return _loglog_slope(widths, ys)
+
+    def candidate_view(self, candidate: int) -> CoordCheckResult:
+        """Single-candidate slice with the classic CoordCheckResult schema."""
+        return CoordCheckResult(records={
+            w: [
+                {k: float(v[candidate]) for k, v in step.items()}
+                for step in recs
+            ]
+            for w, recs in self.records.items()
+        })
+
+
+def _loglog_slope(widths: Sequence[int], ys: Sequence[float]) -> float:
+    xs = jnp.log2(jnp.asarray(widths, jnp.float64))
+    ly = jnp.log2(jnp.asarray(ys, jnp.float64))
+    xbar, ybar = xs.mean(), ly.mean()
+    denom = ((xs - xbar) ** 2).sum()
+    return float(((xs - xbar) * (ly - ybar)).sum() / denom)
 
 
 def _coord_size(x: jax.Array) -> jax.Array:
     return jnp.mean(jnp.abs(x.astype(jnp.float32)))
+
+
+def coord_check_batched(
+    make_model: Callable[[int], Tuple[Any, Any, Callable]],
+    widths: Sequence[int],
+    batches: Sequence[Any],
+    parametrization: Parametrization,
+    optimizer: str = "adam",
+    lrs: Sequence[float] = (1e-2,),
+    seed: int = 0,
+) -> BatchedCoordCheckResult:
+    """Run the coordinate check over `widths` x `lrs`, training on `batches`.
+
+    make_model(width) -> (params, meta, loss_fn) where
+    loss_fn(params, batch) -> (loss, acts_dict).  All LR candidates start
+    from the same init and see the same batches; each evolves its own
+    stacked (params, opt state) copy under vmap.
+    """
+    n = len(lrs)
+    lr_vec = jnp.asarray(lrs, jnp.float32)
+    records: Dict[int, List[Dict[str, np.ndarray]]] = {}
+    for width in widths:
+        p0, meta, loss_fn = make_model(width)
+        opt = Optimizer.create(
+            optimizer, lr=0.0, parametrization=parametrization, meta=meta
+        )
+        params = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p[None], (n,) + p.shape), p0
+        )
+        opt_state = jax.vmap(opt.init)(params)
+
+        def one(params_i, opt_state_i, lr_i, batch):
+            # stats of the CURRENT params, then step — Fig. 5 logs x_t
+            # pre-update.  x_t - x_0 (same batch) removes the muP init-GP
+            # artifact: output logits are Theta(1/sqrt(n)) at init by
+            # design, but their *updates* must be Theta(1).
+            (loss, acts), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params_i, batch)
+            _, acts0 = loss_fn(p0, batch)  # initial params: shared, unbatched
+            rec = {k: _coord_size(v) for k, v in acts.items()}
+            for k, v in acts.items():
+                rec[f"{k}.delta"] = _coord_size(v - acts0[k])
+            rec["__param_l1_drift__"] = sum(
+                jnp.sum(jnp.abs(a - b))
+                for a, b in zip(
+                    jax.tree_util.tree_leaves(params_i),
+                    jax.tree_util.tree_leaves(p0),
+                )
+            )
+            updates, opt_state_i = opt.update(
+                grads, opt_state_i, params_i, lr=lr_i
+            )
+            return apply_updates(params_i, updates), opt_state_i, rec
+
+        step = jax.jit(
+            jax.vmap(one, in_axes=(0, 0, 0, None))
+        )
+
+        per_step: List[Dict[str, np.ndarray]] = []
+        for batch in batches:
+            params, opt_state, rec = step(params, opt_state, lr_vec, batch)
+            per_step.append(
+                {k: np.asarray(v, np.float32) for k, v in rec.items()}
+            )
+        records[width] = per_step
+    return BatchedCoordCheckResult(lrs=list(lrs), records=records)
 
 
 def coord_check(
@@ -58,48 +169,10 @@ def coord_check(
     lr: float = 1e-2,
     seed: int = 0,
 ) -> CoordCheckResult:
-    """Run the coordinate check over `widths`, training on `batches`.
-
-    make_model(width) -> (params, meta, loss_fn) where
-    loss_fn(params, batch) -> (loss, acts_dict).
-    """
-    records: Dict[int, List[Dict[str, float]]] = {}
-    for width in widths:
-        params, meta, loss_fn = make_model(width)
-        opt = Optimizer.create(
-            optimizer, lr=lr, parametrization=parametrization, meta=meta
-        )
-        opt_state = opt.init(params)
-        p0 = params
-
-        @jax.jit
-        def step(params, opt_state, batch):
-            (loss, acts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
-                params, batch
-            )
-            updates, opt_state = opt.update(grads, opt_state, params)
-            params = jax.tree_util.tree_map(lambda p, u: p + u, params, updates)
-            return params, opt_state, loss, acts
-
-        per_step: List[Dict[str, float]] = []
-        init_acts = None
-        for t, batch in enumerate(batches):
-            _, acts_t = loss_fn(params, batch)
-            # activations of the INITIAL params on the same batch — Fig. 5
-            # plots the coordinate size of x_t - x_0, which removes the muP
-            # init-GP artifact (output logits are Theta(1/sqrt(n)) at init
-            # by design, but their *updates* must be Theta(1)).
-            _, init_acts = loss_fn(p0, batch)
-            rec = {k: float(_coord_size(v)) for k, v in acts_t.items()}
-            for k, v in acts_t.items():
-                rec[f"{k}.delta"] = float(_coord_size(v - init_acts[k]))
-            # also track drift of the params' function via delta stats
-            delta = jax.tree_util.tree_map(lambda a, b: a - b, params, p0)
-            dn = sum(
-                float(jnp.sum(jnp.abs(x))) for x in jax.tree_util.tree_leaves(delta)
-            )
-            rec["__param_l1_drift__"] = dn
-            per_step.append(rec)
-            params, opt_state, loss, acts = step(params, opt_state, batch)
-        records[width] = per_step
-    return CoordCheckResult(records=records)
+    """Single-LR coordinate check (classic API) — a one-candidate batch of
+    :func:`coord_check_batched`."""
+    res = coord_check_batched(
+        make_model, widths, batches, parametrization,
+        optimizer=optimizer, lrs=(lr,), seed=seed,
+    )
+    return res.candidate_view(0)

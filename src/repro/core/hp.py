@@ -1,0 +1,98 @@
+"""Runtime hyperparameters — the traced-scalar HP bundle for batched sweeps.
+
+Historically every muTransferable HP (lr, sigma, alpha_output, alpha_attn,
+alpha_embed) was a Python float baked into the config / optimizer at build
+time, so evaluating N candidates meant N separate traces and N serial runs.
+:class:`RuntimeHP` moves those HPs to *runtime*: a registered JAX pytree of
+scalars (or stacked ``(N,)`` vectors) that is threaded through
+
+  - ``core.init.init_params``         (sigma -> init std),
+  - ``models.model.Model.forward``    (alpha_embed / alpha_output / alpha_attn
+                                       forward multipliers),
+  - ``optim.optimizer.Optimizer.update`` (lr override), and
+  - ``optim.schedules``               (traced-safe warmup/decay arithmetic),
+
+so a single ``jax.vmap`` over a stacked :class:`RuntimeHP` trains all N
+candidates simultaneously (see ``core.tuning.batched_train``).
+
+Only per-candidate *scalars* live here.  Structural HPs (optimizer kind,
+schedule shape, b1/b2, width) stay in the config / Optimizer and are shared
+by every candidate in a batch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.transfer import HParams
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["lr", "sigma", "alpha_output", "alpha_attn", "alpha_embed"],
+    meta_fields=[],
+)
+@dataclasses.dataclass(frozen=True)
+class RuntimeHP:
+    """Traced per-candidate HP scalars.  Leaves may be Python floats, 0-d
+    arrays (one candidate) or ``(N,)`` arrays (a stacked candidate batch)."""
+
+    lr: Any = 1e-2
+    sigma: Any = 1.0
+    alpha_output: Any = 1.0
+    alpha_attn: Any = 1.0
+    alpha_embed: Any = 1.0
+
+    @staticmethod
+    def from_hparams(hps: HParams) -> "RuntimeHP":
+        return RuntimeHP(
+            lr=hps.lr,
+            sigma=hps.sigma,
+            alpha_output=hps.alpha_output,
+            alpha_attn=hps.alpha_attn,
+            alpha_embed=hps.alpha_embed,
+        )
+
+    @staticmethod
+    def from_config(cfg, lr: float) -> "RuntimeHP":
+        """HPs currently baked into a config, as a runtime bundle."""
+        return RuntimeHP(
+            lr=lr,
+            sigma=cfg.sigma,
+            alpha_output=cfg.alpha_output,
+            alpha_attn=cfg.alpha_attn,
+            alpha_embed=cfg.alpha_embed,
+        )
+
+
+def stack_hparams(candidates: Sequence[HParams]) -> RuntimeHP:
+    """Stack N candidates into a RuntimeHP of ``(N,)`` float32 vectors —
+    the batch axis that ``jax.vmap`` (and the sweep engine) maps over."""
+    if not candidates:
+        raise ValueError("stack_hparams: empty candidate list")
+
+    def col(field: str) -> jax.Array:
+        return jnp.asarray(
+            [getattr(h, field) for h in candidates], jnp.float32
+        )
+
+    return RuntimeHP(
+        lr=col("lr"),
+        sigma=col("sigma"),
+        alpha_output=col("alpha_output"),
+        alpha_attn=col("alpha_attn"),
+        alpha_embed=col("alpha_embed"),
+    )
+
+
+def hp_at(stack: RuntimeHP, i: int) -> RuntimeHP:
+    """Candidate ``i`` of a stacked RuntimeHP (for serial reference runs)."""
+    return jax.tree_util.tree_map(lambda x: x[i], stack)
+
+
+def n_candidates(stack: RuntimeHP) -> int:
+    return int(jnp.shape(stack.lr)[0])

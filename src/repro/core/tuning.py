@@ -1,10 +1,31 @@
-"""HP search on the proxy model (Sec. 7 methodology).
+"""HP search on the proxy model (Sec. 7 methodology) — vectorized.
 
 Random search over log-uniform/grid spaces, selecting by *training loss*
 (App. A: "using training loss as the metric can be more robust to seed than
 validation loss").  The searcher is deliberately simple — the paper's claim
 is that *any* tuner pointed at the proxy works; Bayesian tuners etc. are
 complementary (Sec. 10.1).
+
+The engine is **batched**: N HP candidates (lr, sigma, alpha_*) are trained
+*simultaneously* by ``jax.vmap`` over stacked model/optimizer states.  The
+per-candidate HPs travel as a stacked :class:`repro.core.hp.RuntimeHP`
+pytree of traced scalars — through ``init_params`` (sigma), the model
+forward (alpha multipliers) and ``Optimizer.update`` (lr) — so one compiled
+step trains the whole candidate batch.  Compared with the old serial loop
+this removes N-1 recompilations and turns N small launches into one large
+one; ``benchmarks/perf_sweep.py`` measures the speedup.
+
+Layers:
+
+  - :func:`batched_train` — model-agnostic core: any (init_fn, loss_fn, opt)
+    triple gets vmapped candidate training with divergence pruning.
+  - :func:`train_proxy_batched` — the transformer proxy tuner (Sec. 7.1).
+  - :func:`train_proxy_serial` — reference serial loop with per-candidate
+    baked constants (the pre-engine behavior), kept for equivalence tests
+    and as the perf baseline.
+  - :func:`random_search` — Sec. 7.1 random search, batched by default.
+
+``launch/sweep.py`` adds device sharding of the candidate axis and a CLI.
 """
 from __future__ import annotations
 
@@ -16,11 +37,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.hp import RuntimeHP, stack_hparams
+from repro.core.init import init_params
 from repro.core.transfer import HParams
 from repro.data.pipeline import make_pipeline
 from repro.models.model import build_model
 from repro.optim.optimizer import Optimizer, apply_updates
 from repro.optim import schedules as sched_lib
+
+# EMA decay of the train-loss tuning metric (App. A); shared by the batched
+# engine and both serial reference paths so their scores stay comparable.
+EMA_DECAY = 0.7
 
 
 @dataclasses.dataclass
@@ -43,6 +70,373 @@ class SearchSpace:
             alpha_embed=pick(self.alpha_embed),
         )
 
+    def sample_n(self, n: int, seed: int = 0) -> List[HParams]:
+        rng = np.random.RandomState(seed)
+        return [self.sample(rng) for _ in range(n)]
+
+
+def grid_candidates(
+    base: Optional[HParams] = None, **fields: Sequence[float]
+) -> List[HParams]:
+    """Cartesian-product HP grid, e.g. ``grid_candidates(lr=LRS, sigma=(0.5, 1))``
+    — the Fig. 3/4 sweep shape.  Unswept fields keep ``base``'s values
+    (HParams defaults when no base is given); pass ``base=config_hparams(cfg,
+    lr)`` to sweep around a config's baked HPs instead of all-1.0."""
+    names = list(fields)
+    out: List[HParams] = [base or HParams()]
+    for name in names:
+        out = [
+            h.replace(**{name: float(v)}) for h in out for v in fields[name]
+        ]
+    return out
+
+
+def config_hparams(cfg, lr: float) -> HParams:
+    """The HP bundle a config would train with when its values are baked in —
+    the right ``base`` for grids that sweep one HP of a named config."""
+    return HParams(
+        lr=lr, sigma=cfg.sigma, alpha_output=cfg.alpha_output,
+        alpha_attn=cfg.alpha_attn, alpha_embed=cfg.alpha_embed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batched engine (model-agnostic core)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    """Per-candidate outcome of one (batched or serial) sweep run.
+
+    losses: (N,) final EMA train loss — the tuning metric; inf if diverged.
+    curves: (T, N) per-step train loss; inf once a candidate is pruned.
+    active: (N,) bool — still alive at the end (not diverged, not pruned).
+    """
+
+    candidates: List[HParams]
+    losses: np.ndarray
+    curves: np.ndarray
+    active: np.ndarray
+    steps_run: int
+
+    @property
+    def best_index(self) -> int:
+        return int(np.argmin(self.losses))
+
+    @property
+    def best(self) -> HParams:
+        return self.candidates[self.best_index]
+
+    @property
+    def best_loss(self) -> float:
+        return float(self.losses[self.best_index])
+
+    def trials(self) -> List[Tuple[HParams, float]]:
+        return list(zip(self.candidates, [float(x) for x in self.losses]))
+
+
+def candidate_rngs(seed: int, n: int) -> jax.Array:
+    """Per-candidate init keys: fold_in(PRNGKey(seed), i) — shared between
+    the batched engine and the serial reference so runs are comparable."""
+    key = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(n))
+
+
+def make_batched_step(
+    loss_fn: Callable[[Any, Any, RuntimeHP], jax.Array],
+    opt: Optimizer,
+) -> Callable:
+    """One vmapped candidate-step:  (params, opt_state, active, hp, batch) ->
+    (params, opt_state, loss, active).
+
+    A candidate whose loss goes non-finite is *pruned*: its params and
+    optimizer state freeze, its recorded loss becomes +inf, and ``active``
+    turns (and stays) False.  The batch axis is the leading axis of params /
+    opt_state / active / hp; the data batch is shared by all candidates.
+    """
+
+    def one(params, opt_state, active, hp: RuntimeHP, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, hp)
+        )(params)
+        updates, new_opt_state = opt.update(grads, opt_state, params, lr=hp.lr)
+        ok = jnp.logical_and(active, jnp.isfinite(loss))
+        params = jax.tree_util.tree_map(
+            lambda p, u: jnp.where(ok, p + u, p), params, updates
+        )
+        opt_state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(ok, new, old), new_opt_state, opt_state
+        )
+        return params, opt_state, jnp.where(ok, loss, jnp.inf), ok
+
+    # donate the stacked params/opt state: they are dead after each step,
+    # and N-candidate stacks are the engine's largest buffers
+    return jax.jit(
+        jax.vmap(one, in_axes=(0, 0, 0, 0, None)), donate_argnums=(0, 1)
+    )
+
+
+def batched_train(
+    init_fn: Callable[[jax.Array, RuntimeHP], Any],
+    loss_fn: Callable[[Any, Any, RuntimeHP], jax.Array],
+    opt: Optimizer,
+    hp_stack: RuntimeHP,
+    batches: Sequence[Any],
+    *,
+    seed: int = 0,
+    rngs: Optional[jax.Array] = None,
+    ema_decay: float = EMA_DECAY,
+    prune_factor: Optional[float] = None,
+    prune_every: int = 10,
+    put_candidate_axis: Optional[Callable[[Any], Any]] = None,
+    stream: Optional[Callable[[int, np.ndarray, np.ndarray], None]] = None,
+) -> Dict[str, Any]:
+    """Train all N candidates of ``hp_stack`` simultaneously via vmap.
+
+    init_fn(rng, hp) -> params            (vmapped over candidates)
+    loss_fn(params, batch, hp) -> scalar  (vmapped; batch is shared)
+
+    Pruning: divergence (non-finite loss) always prunes — the candidate's
+    state freezes and its loss reads +inf from then on.  When
+    ``prune_factor`` is set, every ``prune_every`` steps candidates whose
+    EMA loss exceeds ``prune_factor *`` (current best EMA) are pruned too
+    (their EMA score is frozen as-is).  The loop exits early once every
+    candidate is pruned.
+
+    ``put_candidate_axis`` (from launch/sweep.py) device_puts stacked pytrees
+    with the candidate axis sharded across devices.  ``stream(t, losses,
+    active)`` is invoked after every step with host numpy views.
+
+    Returns {"losses", "curves", "active", "steps_run"} (numpy, see
+    SweepResult) — the caller attaches the candidate list.
+    """
+    n = int(jnp.shape(hp_stack.lr)[0])
+    if rngs is None:
+        rngs = candidate_rngs(seed, n)
+
+    def init_one(rng, hp):
+        params = init_fn(rng, hp)
+        return params, opt.init(params)
+
+    # jit the vmapped init: eager vmap would dispatch one batched op per
+    # tensor; compiled it is a single launch for all N candidates
+    active = jnp.ones((n,), bool)
+    if put_candidate_axis is None:
+        params, opt_state = jax.jit(jax.vmap(init_one))(rngs, hp_stack)
+    else:
+        # apply the candidate-axis sharding INSIDE the compiled init so the
+        # stacked states are born distributed — never materialized on one
+        # device first (which would cap sweep size at one device's memory)
+        params, opt_state = jax.jit(
+            lambda r, h: put_candidate_axis(jax.vmap(init_one)(r, h))
+        )(rngs, hp_stack)
+        hp_stack, active = put_candidate_axis((hp_stack, active))
+
+    step = make_batched_step(loss_fn, opt)
+
+    total = len(batches)
+    curves = np.full((total, n), np.inf, np.float32)
+    ema = np.full((n,), np.nan, np.float64)
+    steps_run = 0
+    prev_active = np.ones((n,), bool)
+    for t, batch in enumerate(batches):
+        params, opt_state, loss, active = step(
+            params, opt_state, active, hp_stack, batch
+        )
+        lf = np.asarray(loss, np.float32)
+        curves[t] = lf
+        steps_run = t + 1
+        # EMA: update while a candidate is alive; a non-finite loss while
+        # alive is divergence -> score inf; already-pruned candidates keep
+        # their frozen EMA (the loss row reads inf but is not a new datum).
+        fresh = np.isnan(ema)
+        with np.errstate(invalid="ignore"):
+            stepped = np.where(
+                np.isinf(lf), np.inf,
+                np.where(fresh, lf, ema_decay * ema + (1 - ema_decay) * lf),
+            )
+        ema = np.where(prev_active, stepped, ema)
+        act_np = np.asarray(active)
+        if (
+            prune_factor is not None
+            and (t + 1) % prune_every == 0
+            and act_np.any()
+        ):
+            best = float(np.min(ema[act_np]))
+            if math.isfinite(best) and best > 0:
+                keep = ema <= prune_factor * best
+                act_np = act_np & keep
+                active = jnp.asarray(act_np)
+        prev_active = act_np
+        if stream is not None:
+            stream(t, lf, act_np)
+        if not act_np.any():
+            break
+
+    losses = np.where(np.isnan(ema), np.inf, ema).astype(np.float64)
+    return {
+        "losses": losses,
+        "curves": curves[:steps_run],
+        "active": np.asarray(active),
+        "steps_run": steps_run,
+    }
+
+
+# ---------------------------------------------------------------------------
+# transformer proxy tuning (Sec. 7.1)
+# ---------------------------------------------------------------------------
+
+def _proxy_batches(cfg, steps: int, batch_size: int, seq_len: int, seed: int):
+    pipe = make_pipeline(cfg.vocab_size, seq_len, batch_size, seed=seed)
+    return [
+        {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+        for t in range(steps)
+    ]
+
+
+def _shared_scalar(candidates: Sequence[HParams], field: str):
+    vals = {getattr(h, field) for h in candidates}
+    if len(vals) > 1:
+        raise ValueError(
+            f"{field} is not vectorized by the batched engine; all candidates "
+            f"in one batch must share it (got {sorted(vals)})"
+        )
+    return vals.pop()
+
+
+# HParams fields the engine does not implement at all (schedule shape and
+# warmup come in via the ``schedule`` argument; weight_decay/dropout are not
+# muTransferable; lr_embed is a per-layer HP outside the RuntimeHP bundle).
+# Reject non-default values loudly instead of training something else.
+_UNSUPPORTED_FIELDS = (
+    "schedule", "warmup_steps", "weight_decay", "dropout", "lr_embed",
+)
+
+
+def _reject_unsupported(candidates: Sequence[HParams]) -> None:
+    defaults = HParams()
+    for field in _UNSUPPORTED_FIELDS:
+        bad = {getattr(h, field) for h in candidates} - {getattr(defaults, field)}
+        if bad:
+            raise ValueError(
+                f"HParams.{field}={sorted(map(str, bad))} is not applied by "
+                f"the batched engine (pass schedule= explicitly; retune "
+                f"regularization at target scale); refusing to ignore it"
+            )
+
+
+def train_proxy_batched(
+    cfg,
+    candidates: Sequence[HParams],
+    *,
+    steps: int = 50,
+    batch_size: int = 16,
+    seq_len: int = 64,
+    seed: int = 0,
+    optimizer: str = "adamw",
+    schedule=None,
+    rngs: Optional[jax.Array] = None,
+    prune_factor: Optional[float] = None,
+    prune_every: int = 10,
+    put_candidate_axis: Optional[Callable[[Any], Any]] = None,
+    stream: Optional[Callable[[int, np.ndarray, np.ndarray], None]] = None,
+) -> SweepResult:
+    """Train all candidates on the proxy simultaneously (one vmapped trace).
+
+    lr / sigma / alpha_* vary per candidate (traced scalars); b1/b2 and the
+    schedule are structural and must be shared across the batch.  All
+    candidates see the same data stream (seed) — HP comparison on identical
+    batches — and candidate ``i`` inits from ``fold_in(PRNGKey(seed), i)``
+    unless ``rngs`` (an (N, key) array, e.g. one key broadcast N ways for a
+    shared-init controlled sweep) says otherwise.
+    """
+    candidates = list(candidates)
+    b1 = _shared_scalar(candidates, "b1")
+    b2 = _shared_scalar(candidates, "b2")
+    _reject_unsupported(candidates)
+    cfg = cfg.replace(dtype="float32")
+    model = build_model(cfg)
+    p13n = model.p13n
+    hp_stack = stack_hparams(candidates)
+    opt = Optimizer.create(
+        optimizer, lr=0.0, parametrization=p13n, meta=model.meta,
+        b1=b1, b2=b2, schedule=schedule or sched_lib.make_schedule("constant"),
+    )
+    out = batched_train(
+        init_fn=lambda rng, hp: init_params(rng, model.meta, p13n, sigma=hp.sigma),
+        loss_fn=lambda p, batch, hp: model.loss_fn(p, batch, hp=hp),
+        opt=opt,
+        hp_stack=hp_stack,
+        batches=_proxy_batches(cfg, steps, batch_size, seq_len, seed),
+        seed=seed,
+        rngs=rngs,
+        prune_factor=prune_factor,
+        prune_every=prune_every,
+        put_candidate_axis=put_candidate_axis,
+        stream=stream,
+    )
+    return SweepResult(candidates=candidates, **out)
+
+
+def train_proxy_serial(
+    cfg,
+    candidates: Sequence[HParams],
+    *,
+    steps: int = 50,
+    batch_size: int = 16,
+    seq_len: int = 64,
+    seed: int = 0,
+    optimizer: str = "adamw",
+) -> SweepResult:
+    """Reference serial loop: one candidate at a time with its HPs baked in
+    as Python constants (fresh trace per candidate) — exactly the pre-engine
+    behavior, but with the engine's rng/data conventions so results are
+    directly comparable to :func:`train_proxy_batched`."""
+    candidates = list(candidates)
+    n = len(candidates)
+    cfg = cfg.replace(dtype="float32")
+    batches = _proxy_batches(cfg, steps, batch_size, seq_len, seed)
+    rngs = candidate_rngs(seed, n)
+
+    curves = np.full((steps, n), np.inf, np.float32)
+    losses = np.full((n,), np.inf, np.float64)
+    active = np.zeros((n,), bool)
+    for i, hps in enumerate(candidates):
+        cfg_i = cfg.replace(
+            sigma=hps.sigma, alpha_output=hps.alpha_output,
+            alpha_attn=hps.alpha_attn, alpha_embed=hps.alpha_embed,
+        )
+        model = build_model(cfg_i)
+        params = init_params(rngs[i], model.meta, model.p13n, sigma=hps.sigma)
+        opt = Optimizer.create(
+            optimizer, lr=hps.lr, parametrization=model.p13n, meta=model.meta,
+            b1=hps.b1, b2=hps.b2, schedule=sched_lib.make_schedule("constant"),
+        )
+        opt_state = opt.init(params)
+
+        @jax.jit
+        def step_fn(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            updates, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, updates), opt_state, loss
+
+        ema = None
+        alive = True
+        for t, batch in enumerate(batches):
+            params, opt_state, loss = step_fn(params, opt_state, batch)
+            lf = float(loss)
+            if not math.isfinite(lf):
+                ema, alive = float("inf"), False
+                break
+            curves[t, i] = lf
+            ema = lf if ema is None else EMA_DECAY * ema + (1 - EMA_DECAY) * lf
+        losses[i] = ema if ema is not None else float("inf")
+        active[i] = alive
+    return SweepResult(
+        candidates=candidates, losses=losses, curves=curves,
+        active=active, steps_run=steps,
+    )
+
 
 def train_proxy(
     cfg,
@@ -53,7 +447,10 @@ def train_proxy(
     seed: int = 0,
     optimizer: str = "adamw",
 ) -> float:
-    """Train the proxy briefly; return final train loss (the tuning metric)."""
+    """Train the proxy briefly; return final train loss (the tuning metric).
+
+    Single-candidate legacy path (own data stream per seed); sweeps should
+    use :func:`train_proxy_batched`."""
     cfg = cfg.replace(
         sigma=hps.sigma,
         alpha_output=hps.alpha_output,
@@ -85,7 +482,7 @@ def train_proxy(
         lf = float(loss)
         if math.isnan(lf) or math.isinf(lf):
             return float("inf")  # diverged — worst possible score
-        ema = lf if ema is None else 0.7 * ema + 0.3 * lf
+        ema = lf if ema is None else EMA_DECAY * ema + (1 - EMA_DECAY) * lf
     return ema if ema is not None else float("inf")
 
 
@@ -98,13 +495,26 @@ def random_search(
     seq_len: int = 64,
     seed: int = 0,
     eval_fn: Optional[Callable[[HParams], float]] = None,
+    batched: bool = True,
+    prune_factor: Optional[float] = None,
 ) -> Tuple[HParams, List[Tuple[HParams, float]]]:
-    """Random HP search on the proxy (Sec. 7.1).  Returns (best, trials)."""
+    """Random HP search on the proxy (Sec. 7.1).  Returns (best, trials).
+
+    With ``batched=True`` (default) all samples train simultaneously through
+    the vmapped engine on one shared data stream.  ``eval_fn`` (or
+    ``batched=False``) falls back to the serial per-trial loop, where trial
+    ``i`` uses data seed ``seed + i`` (the legacy behavior)."""
     space = space or SearchSpace()
     rng = np.random.RandomState(seed)
+    samples = [space.sample(rng) for _ in range(n_samples)]
+    if eval_fn is None and batched:
+        res = train_proxy_batched(
+            proxy_cfg, samples, steps=steps, batch_size=batch_size,
+            seq_len=seq_len, seed=seed, prune_factor=prune_factor,
+        )
+        return res.best, res.trials()
     trials: List[Tuple[HParams, float]] = []
-    for i in range(n_samples):
-        hps = space.sample(rng)
+    for i, hps in enumerate(samples):
         if eval_fn is not None:
             score = eval_fn(hps)
         else:

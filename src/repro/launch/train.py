@@ -103,6 +103,12 @@ def train_loop(
     with sharding_ctx(mesh, rules):
         for t in range(start_step, steps):
             if simulate_failure_at is not None and t == simulate_failure_at:
+                # drain in-flight async saves first: the injected crash
+                # models a failure *between* steps, not one that races the
+                # previous checkpoint's commit (which would make the resume
+                # point nondeterministic)
+                if ckpt:
+                    ckpt.wait()
                 raise SimulatedFailure(f"injected node failure at step {t}")
             t0 = time.time()
             batch = {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}

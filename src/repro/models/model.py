@@ -103,24 +103,27 @@ class Model:
         return init_params(rng, self.meta, self.p13n, self.cfg.sigma, dtype)
 
     # ------------------------------------------------------------------
-    def _embed(self, params, tokens):
+    def _embed(self, params, tokens, hp=None):
         cfg = self.cfg
         w = params["embed"]
         x = jnp.take(w, tokens, axis=0)
-        m = cfg.alpha_embed * mult_of(self.meta["embed"], self.p13n)
-        x = x.astype(ACT_DTYPES[cfg.dtype]) * jnp.asarray(m, ACT_DTYPES[cfg.dtype])
+        alpha = cfg.alpha_embed if hp is None else hp.alpha_embed
+        m = jnp.asarray(alpha * mult_of(self.meta["embed"], self.p13n),
+                        ACT_DTYPES[cfg.dtype])
+        x = x.astype(ACT_DTYPES[cfg.dtype]) * m
         return shard(x, "batch", "seq", "embed")
 
-    def _readout(self, params, x):
+    def _readout(self, params, x, hp=None):
         cfg = self.cfg
+        alpha = cfg.alpha_output if hp is None else hp.alpha_output
         if cfg.tie_embeddings:
             view = _readout_view_meta(cfg)
-            m = cfg.alpha_output * mult_of(view, self.p13n)
+            m = alpha * mult_of(view, self.p13n)
             logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
         else:
-            m = cfg.alpha_output * mult_of(self.meta["unembed"], self.p13n)
+            m = alpha * mult_of(self.meta["unembed"], self.p13n)
             logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
-        logits = logits.astype(jnp.float32) * m
+        logits = logits.astype(jnp.float32) * jnp.asarray(m, jnp.float32)
         logits = softcap(logits, cfg.final_softcap)
         return shard(logits, "batch", "seq", "vocab")
 
@@ -167,7 +170,11 @@ class Model:
         mode: str = "train",
         cache: Optional[Dict] = None,
         cache_len: int = 0,
+        hp=None,
     ) -> Tuple[jax.Array, Optional[Dict]]:
+        """``hp`` (a core.hp.RuntimeHP or None) supplies *traced* per-call
+        forward multipliers (alpha_embed/alpha_attn/alpha_output) — used by
+        the batched sweep engine; None keeps the config's baked floats."""
         cfg = self.cfg
         B, S = tokens.shape
         if positions is None:
@@ -178,27 +185,27 @@ class Model:
             memory = None  # cross k/v live in the cache
         else:
             memory = self._memory(params, memory_inputs or {})
-        x = self._embed(params, tokens)
+        x = self._embed(params, tokens, hp=hp)
         if cfg.family == "encdec":
             pe = sinusoidal(cfg.max_seq_len, cfg.d_model, x.dtype)
             x = x + pe[positions]
         ctx = tfm.Ctx(
             positions=positions, causal=True, memory=memory,
-            mode=mode, cache_len=cache_len,
+            mode=mode, cache_len=cache_len, hp=hp,
         )
         x, new_cache = tfm.run_stack(
             cfg, params["groups"], self.meta["groups"],
             params["tail"], self.meta["tail"], x, ctx, cache,
         )
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
-        logits = self._readout(params, x)
+        logits = self._readout(params, x, hp=hp)
         return logits, new_cache
 
     # ------------------------------------------------------------------
-    def loss_fn(self, params, batch, collect_acts: bool = False):
+    def loss_fn(self, params, batch, collect_acts: bool = False, hp=None):
         """Next-token CE. batch: tokens (B,S), labels (B,S) (-100 = masked)."""
         logits, _ = self.forward(
-            params, batch["tokens"], memory_inputs=batch, mode="train"
+            params, batch["tokens"], memory_inputs=batch, mode="train", hp=hp
         )
         labels = batch["labels"]
         mask = (labels >= 0).astype(jnp.float32)

@@ -51,6 +51,14 @@ class Ctx:
     memory_pos: Optional[jax.Array] = None
     mode: str = "train"                  # "train" | "prefill" | "decode"
     cache_len: int = 0                   # target KV cache length (prefill/decode)
+    hp: Optional[Any] = None             # RuntimeHP: traced per-candidate HPs
+                                         # (None -> use the cfg's baked floats)
+
+
+def _alpha_attn(cfg, ctx: Ctx):
+    """alpha_attn as a (possibly traced) scalar: the runtime-HP override when
+    a sweep threads one through, else the config's baked float."""
+    return cfg.alpha_attn if ctx.hp is None else ctx.hp.alpha_attn
 
 
 # ---------------------------------------------------------------------------
@@ -158,7 +166,7 @@ def _self_attention(
         k = apply_rope(k, ctx.positions, cfg.rope_theta)
     q, k, v = attn_lib.sharded_qkv(q, k, v)
     scale = attention_scale(
-        Parametrization(p13n), cfg.d_head, cfg.base_d_head, cfg.alpha_attn
+        Parametrization(p13n), cfg.d_head, cfg.base_d_head, _alpha_attn(cfg, ctx)
     )
 
     new_cache = None
@@ -208,7 +216,7 @@ def _cross_attention(cfg, params, meta, x, ctx: Ctx, cache, p13n):
     M = k.shape[1]
     mask = jnp.ones((B, S, M), bool)  # full visibility over memory
     scale = attention_scale(
-        Parametrization(p13n), cfg.d_head, cfg.base_d_head, cfg.alpha_attn
+        Parametrization(p13n), cfg.d_head, cfg.base_d_head, _alpha_attn(cfg, ctx)
     )
     out = attn_lib.attend(q, k, v, mask, scale, 0.0)
     out = apply_w(out, params["wo"], meta["wo"], p13n, "bshk,hkd->bsd")

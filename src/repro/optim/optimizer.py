@@ -121,8 +121,16 @@ class Optimizer:
     def _sched(self, count: jax.Array) -> jax.Array:
         return self.schedule(count) if self.schedule is not None else jnp.float32(1.0)
 
-    def update(self, grads: Any, state: Any, params: Any) -> tuple:
-        """Returns (updates, new_state); apply with params + updates."""
+    def update(
+        self, grads: Any, state: Any, params: Any, lr: Optional[Any] = None
+    ) -> tuple:
+        """Returns (updates, new_state); apply with params + updates.
+
+        ``lr`` overrides the master LR for this call and may be a *traced*
+        scalar — this is how the batched sweep engine (core.tuning) gives
+        each vmapped candidate its own learning rate from one compiled step.
+        """
+        lr = self.lr if lr is None else lr
         count = state["count"] + 1
         sched = self._sched(state["count"]).astype(jnp.float32)
         new_state = {"count": count}
@@ -141,9 +149,9 @@ class Optimizer:
                 eff = g32
 
             def upd(g, lr_mult, p):
-                step = -self.lr * sched * lr_mult * g
+                step = -lr * sched * lr_mult * g
                 if self.weight_decay:
-                    step = step - self.lr * sched * self.weight_decay * p
+                    step = step - lr * sched * self.weight_decay * p
                 return step.astype(p.dtype)
 
             updates = jax.tree_util.tree_map(upd, eff, self.lr_mults, params)
@@ -156,11 +164,11 @@ class Optimizer:
             new_state["nu"] = nu
 
             def upd(g, v, lr_mult, em, p):
-                step = -self.lr * sched * lr_mult * g / (
+                step = -lr * sched * lr_mult * g / (
                     jnp.sqrt(v) + self.eps * em
                 )
                 if self.weight_decay:
-                    step = step - self.lr * sched * self.weight_decay * p
+                    step = step - lr * sched * self.weight_decay * p
                 return step.astype(p.dtype)
 
             updates = jax.tree_util.tree_map(
@@ -184,12 +192,12 @@ class Optimizer:
         def upd(m, v, lr_mult, em, p):
             mhat = m / bc1
             vhat = v / bc2
-            step = -self.lr * sched * lr_mult * mhat / (
+            step = -lr * sched * lr_mult * mhat / (
                 jnp.sqrt(vhat) + self.eps * em
             )
             if self.kind == "adamw" and self.weight_decay:
                 # decoupled, master-LR-scaled: width-independent
-                step = step - self.lr * sched * self.weight_decay * p
+                step = step - lr * sched * self.weight_decay * p
             return step.astype(p.dtype)
 
         updates = jax.tree_util.tree_map(

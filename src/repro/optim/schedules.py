@@ -3,6 +3,11 @@
 All return a multiplicative factor of the master LR as a function of step,
 so the schedule *shape* is a muTransferable HP (Table 2) while total steps is
 a transferred-across HP (Table 1).
+
+Every schedule is built from ``jnp`` arithmetic only (no Python branches on
+values), so ``total_steps`` / ``warmup_steps`` may be *traced* scalars — the
+batched sweep engine (core.tuning) relies on this to give vmapped candidates
+per-candidate schedule parameters from a single compiled step function.
 """
 from __future__ import annotations
 
@@ -15,23 +20,31 @@ def constant() -> Callable:
     return lambda step: jnp.float32(1.0)
 
 
-def warmup_factor(step, warmup_steps: int):
-    if warmup_steps <= 0:
-        return jnp.float32(1.0)
-    return jnp.minimum(1.0, (step + 1) / warmup_steps)
+def warmup_factor(step, warmup_steps):
+    """Linear warmup multiplier; traced-safe in both ``step`` and
+    ``warmup_steps`` (non-positive warmup means no warmup)."""
+    ws = jnp.asarray(warmup_steps, jnp.float32)
+    ramp = jnp.minimum(1.0, (step + 1) / jnp.maximum(ws, 1.0))
+    return jnp.where(ws <= 0, jnp.float32(1.0), ramp)
 
 
-def linear_decay(total_steps: int, warmup_steps: int = 0, end_factor: float = 0.0) -> Callable:
+def _progress(step, total_steps, warmup_steps):
+    ts = jnp.asarray(total_steps, jnp.float32)
+    ws = jnp.asarray(warmup_steps, jnp.float32)
+    return jnp.clip((step - ws) / jnp.maximum(ts - ws, 1.0), 0.0, 1.0)
+
+
+def linear_decay(total_steps, warmup_steps=0, end_factor: float = 0.0) -> Callable:
     def f(step):
-        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        t = _progress(step, total_steps, warmup_steps)
         return warmup_factor(step, warmup_steps) * ((1 - t) + t * end_factor)
 
     return f
 
 
-def cosine(total_steps: int, warmup_steps: int = 0, end_factor: float = 0.0) -> Callable:
+def cosine(total_steps, warmup_steps=0, end_factor: float = 0.0) -> Callable:
     def f(step):
-        t = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        t = _progress(step, total_steps, warmup_steps)
         c = 0.5 * (1 + jnp.cos(jnp.pi * t))
         return warmup_factor(step, warmup_steps) * (end_factor + (1 - end_factor) * c)
 
@@ -48,10 +61,10 @@ def step_decay(milestones: Sequence[int], gamma: float = 0.1) -> Callable:
     return f
 
 
-def inv_sqrt(warmup_steps: int = 1000) -> Callable:
+def inv_sqrt(warmup_steps=1000) -> Callable:
     def f(step):
         s = jnp.maximum(step.astype(jnp.float32), 1.0)
-        w = jnp.float32(max(warmup_steps, 1))
+        w = jnp.maximum(jnp.asarray(warmup_steps, jnp.float32), 1.0)
         return jnp.minimum(s / w, jnp.sqrt(w / s))
 
     return f

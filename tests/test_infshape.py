@@ -1,5 +1,6 @@
 """InfShape bookkeeping property tests."""
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.infshape import InfDim, InfShape, make_infshape

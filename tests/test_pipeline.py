@@ -1,6 +1,7 @@
 """Data pipeline: determinism, stateless resume, host sharding, statistics."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import DataConfig, SyntheticLM, make_pipeline
