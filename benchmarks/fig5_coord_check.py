@@ -1,48 +1,25 @@
 """Fig. 5: coordinate-size growth with width after a few Adam steps —
-logits blow up in SP, stay Theta(1) in muP (the coordinate check)."""
+logits blow up in SP, stay Theta(1) in muP and u-µP (the coordinate
+check), via the ``Experiment`` façade."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from benchmarks.common import Timer, report
-from repro.configs import get_smoke_config
-from repro.core.coord_check import coord_check
-from repro.core.parametrization import Parametrization
-from repro.data.pipeline import make_pipeline
-from repro.models.model import build_model
+from repro.api import Experiment
 
 WIDTHS = (1.0, 2.0, 4.0, 8.0)
 
 
 def run():
     t = Timer()
-    base = get_smoke_config("mup-gpt").replace(
-        dtype="float32", n_layers=2, zero_init_readout=False,
-        zero_init_query=False,
-    )
-    pipe = make_pipeline(256, 32, 8, seed=0)
-    batches = [
-        {k: jnp.asarray(v) for k, v in pipe.batch(i).items()} for i in range(4)
-    ]
     slopes = {}
-    for p13n in ("sp", "mup"):
-        def make_model(i):
-            cfg = base.scaled(WIDTHS[i]).replace(parametrization=p13n)
-            model = build_model(cfg)
-            params = model.init(jnp.asarray([0, 0], jnp.uint32))
-            def loss_fn(params, batch):
-                return model.loss_fn(params, batch, collect_acts=True)
-            return params, model.meta, loss_fn
-
-        res = coord_check(
-            make_model, widths=list(range(len(WIDTHS))), batches=batches,
-            parametrization=Parametrization(p13n), optimizer="adam", lr=2e-2,
+    for p13n in ("sp", "mup", "umup"):
+        exp = Experiment.from_config(
+            "mup-gpt", parametrization=p13n, n_layers=2, dtype="float32"
         )
-        res.records = {int(64 * WIDTHS[i]): v for i, v in res.records.items()}
+        res = exp.coord_check(widths=WIDTHS, steps=4, lr=2e-2)
         slopes[p13n] = res.growth("logits.delta", t=-1)
-    derived = (
-        f"logit_delta_growth_slope_sp={slopes['sp']:.2f};"
-        f"logit_delta_growth_slope_mup={slopes['mup']:.2f}"
+    derived = ";".join(
+        f"logit_delta_growth_slope_{k}={v:.2f}" for k, v in slopes.items()
     )
     report("fig5_coord_check", t.us(), derived)
     return slopes

@@ -1,50 +1,31 @@
 """Coordinate checking (App. D.1): the 1-minute muP implementation check.
 
 Prints the mean |coordinate| of the logits after a few Adam steps, across
-widths — flat in muP, growing in SP.
+widths — flat in muP (and u-µP), growing in SP.  One ``Experiment`` call
+per rule; any name registered with ``repro.core.parametrization.register``
+works.
 
-    PYTHONPATH=src python examples/coord_check_demo.py
+    PYTHONPATH=src python examples/coord_check_demo.py [sp mup umup ...]
 """
-import jax
-import jax.numpy as jnp
+import sys
 
-from repro.configs import get_smoke_config
-from repro.core.coord_check import coord_check
-from repro.core.parametrization import Parametrization
-from repro.data.pipeline import make_pipeline
-from repro.models.model import build_model
+from repro.api import Experiment
 
 WIDTHS = (1.0, 2.0, 4.0, 8.0)
+STEPS = 4
 
 
 def run(p13n: str):
-    base = get_smoke_config("mup-gpt").replace(
-        dtype="float32", n_layers=2,
-        zero_init_readout=False, zero_init_query=False,
+    exp = Experiment.from_config(
+        "mup-gpt", parametrization=p13n, n_layers=2, dtype="float32"
     )
-    pipe = make_pipeline(256, 32, 8, seed=0)
-    batches = [
-        {k: jnp.asarray(v) for k, v in pipe.batch(i).items()} for i in range(4)
-    ]
+    res = exp.coord_check(widths=WIDTHS, steps=STEPS, lr=2e-2)
 
-    def make_model(i):
-        cfg = base.scaled(WIDTHS[i]).replace(parametrization=p13n)
-        model = build_model(cfg)
-        params = model.init(jax.random.PRNGKey(0))
-        return params, model.meta, (
-            lambda p, b: model.loss_fn(p, b, collect_acts=True)
-        )
-
-    res = coord_check(
-        make_model, widths=list(range(len(WIDTHS))), batches=batches,
-        parametrization=Parametrization(p13n), optimizer="adam", lr=2e-2,
-    )
-    res.records = {int(64 * w): v for w, (_, v) in zip(WIDTHS, res.records.items())}
     print(f"\n== {p13n.upper()} ==  mean |logit coordinate| after step t")
     widths = sorted(res.records)
-    print("width " + "".join(f"   t={t}" for t in range(4)))
+    print("width " + "".join(f"   t={t}" for t in range(STEPS)))
     for w in widths:
-        row = [res.records[w][t]["logits"] for t in range(4)]
+        row = [res.records[w][t]["logits"] for t in range(STEPS)]
         print(f"{w:5d} " + "".join(f" {v:6.3f}" for v in row))
     print(f"log-log slope vs width | logits: {res.growth('logits', -1):+.2f} "
           f"| logit updates: {res.growth('logits.delta', -1):+.2f}")
@@ -53,5 +34,5 @@ def run(p13n: str):
 
 
 if __name__ == "__main__":
-    run("sp")
-    run("mup")
+    for name in sys.argv[1:] or ("sp", "mup", "umup"):
+        run(name)

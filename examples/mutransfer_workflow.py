@@ -1,4 +1,4 @@
-"""muTransfer end-to-end (Algorithm 1):
+"""muTransfer end-to-end (Algorithm 1), via the ``Experiment`` façade:
 
   1. take the target config (muP-parametrized),
   2. random-search HPs on a 4x-narrower PROXY — all samples train
@@ -10,42 +10,41 @@
 """
 import numpy as np
 
-from repro.configs import get_smoke_config
-from repro.core.transfer import HParams, make_proxy, transfer
-from repro.core.tuning import SearchSpace, random_search, train_proxy
-from repro.launch.train import train_loop
+from repro.api import Experiment
+from repro.core.hpspace import HParams
 
 
 def main():
-    target = get_smoke_config("mup-gpt").scaled(4.0).replace(dtype="float32")
-    proxy = make_proxy(target, width_factor=0.25, min_d_head=16)
-    print(f"target: d_model={target.d_model}  proxy: d_model={proxy.d_model}")
+    target = Experiment.from_config("mup-gpt", width=4.0, dtype="float32")
+    proxy = target.proxy(width_factor=0.25, min_d_head=16)
+    print(f"target: d_model={target.cfg.d_model}  "
+          f"proxy: d_model={proxy.cfg.d_model}")
 
     # --- step 2: tune the proxy (cheap!) --------------------------------
-    # random_search is batched by default: the 6 samples train as one
-    # vmapped run (per-candidate lr/sigma/alpha_* as traced scalars)
-    space = SearchSpace(
+    # tune() is batched: the candidates train as one vmapped run with
+    # per-candidate lr/sigma/alpha_* as traced scalars.  The sweepable axis
+    # set comes from the parametrization's HP space (swap in
+    # parametrization="umup" above and sigma silently stops being an axis).
+    candidates = proxy.space.with_search(
         lr=tuple(5e-3 * 2.0**z for z in np.arange(-2, 3.0, 1.0)),
         sigma=(0.5, 1.0), alpha_output=(0.5, 1.0, 2.0),
         alpha_attn=(1.0,), alpha_embed=(1.0,),
-    )
-    best, trials = random_search(
-        proxy, n_samples=6, space=space, steps=40, batch_size=8, seq_len=64
-    )
-    for hp, score in sorted(trials, key=lambda t: t[1]):
+    ).sample_n(6, seed=0)
+    res = proxy.tune(candidates=candidates, steps=40, batch_size=8, seq_len=64)
+    for hp, score in sorted(res.trials(), key=lambda t: t[1]):
         print(f"  proxy trial lr={hp.lr:.4f} sigma={hp.sigma} "
               f"a_out={hp.alpha_output} -> loss {score:.4f}")
+    best = res.best
     print(f"best proxy HPs: lr={best.lr:.4f} sigma={best.sigma} "
           f"alpha_output={best.alpha_output}")
 
     # --- step 3: zero-shot transfer to the target ------------------------
-    out = train_loop(
-        target, steps=60, hps=best, batch_size=8, seq_len=64, log_every=20
-    )
+    tuned_target = proxy.transfer(target)
+    out = tuned_target.train(steps=60, batch_size=8, seq_len=64, log_every=20)
     print(f"TARGET with muTransferred HPs: final loss {out['final_loss']:.4f}")
 
-    bad = train_loop(
-        target, steps=60, hps=HParams(lr=best.lr * 32), batch_size=8,
+    bad = target.train(
+        steps=60, hps=HParams(lr=best.lr * 32), batch_size=8,
         seq_len=64, log_every=0,
     )
     print(f"TARGET with 32x-too-big LR:    final loss {bad['final_loss']:.4f}")

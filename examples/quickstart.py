@@ -4,16 +4,21 @@
 
 Every assigned architecture works via --arch (reduced smoke config by
 default so it runs in seconds on CPU; pass --full for the real config).
+The ``Experiment`` façade assembles config + model + muP optimizer; the
+training loop stays explicit here so modality extras (frames / image
+patches) are visible.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs import get_config, get_smoke_config, list_archs
+from repro.api import Experiment
+from repro.configs import list_archs
+from repro.core.hpspace import HParams
+from repro.core.parametrization import available_parametrizations
 from repro.data.pipeline import make_pipeline
-from repro.models.model import build_model
-from repro.optim.optimizer import Optimizer, apply_updates
+from repro.optim.optimizer import apply_updates
 
 
 def main():
@@ -22,18 +27,22 @@ def main():
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--parametrization", default=None,
+                    choices=[str(p) for p in available_parametrizations()])
     args = ap.parse_args()
 
-    cfg = (get_config if args.full else get_smoke_config)(args.arch)
-    cfg = cfg.replace(dtype="float32")
+    exp = Experiment.from_config(
+        args.arch, smoke=not args.full, dtype="float32",
+        parametrization=args.parametrization,
+    )
+    cfg = exp.cfg
     print(f"arch={cfg.name}  params≈{cfg.param_count()/1e6:.1f}M  "
           f"parametrization={cfg.parametrization}")
 
-    model = build_model(cfg)
+    model = exp.build()
     params = model.init(jax.random.PRNGKey(0))
-    opt = Optimizer.create(
-        "adamw", lr=args.lr, parametrization=model.p13n, meta=model.meta,
-        weight_decay=0.01,
+    opt = exp.optimizer(
+        "adamw", hps=HParams(lr=args.lr), model=model, weight_decay=0.01
     )
     state = opt.init(params)
     pipe = make_pipeline(cfg.vocab_size, seq_len=64, global_batch=8)

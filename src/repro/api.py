@@ -1,0 +1,255 @@
+"""Experiment — the one-object muTransfer workflow (Algorithm 1 as an API).
+
+Everything the paper's workflow needs used to require hand-assembling five
+modules (configs + models.model + core.init + optim.optimizer + core.tuning
+/ launch.train).  ``Experiment`` wires them:
+
+    from repro.api import Experiment
+
+    exp    = Experiment.from_config("mup-gpt")        # muP-parametrized target
+    proxy  = exp.proxy(width_factor=0.25)             # Algorithm 1 step 2 model
+    proxy.coord_check()                               # verify the parametrization
+    result = proxy.tune(n_samples=16, steps=40)       # vmap-batched HP sweep
+    target = proxy.transfer(exp)                      # zero-shot HP copy
+    target.train(steps=200)                           # train the target
+
+Each Experiment is a (ModelConfig, optional tuned-HParams) pair; the
+parametrization is resolved from the config string through the registry
+(``repro.core.parametrization``), so a rule added with ``register()`` —
+including the built-in u-µP — gets the whole workflow for free, with its own
+HP space (u-µP sweeps no ``sigma``).
+
+Lower-level handles (``build()``, ``optimizer()``) stay available for
+custom training loops; the underlying modules remain importable as before.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import ModelConfig
+from repro.core import coord_check as coord_check_lib
+from repro.core import transfer as transfer_lib
+from repro.core import tuning as tuning_lib
+from repro.core.hpspace import HParams, HPSpace
+from repro.core.parametrization import AbcParametrization, resolve
+from repro.data.pipeline import make_pipeline
+from repro.models.model import Model, build_model
+from repro.optim.optimizer import Optimizer
+
+
+@dataclasses.dataclass
+class Experiment:
+    """A model config + (optionally) the HPs tuned for it."""
+
+    cfg: ModelConfig
+    hps: Optional[HParams] = None
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_config(
+        cls,
+        arch: Union[str, ModelConfig],
+        smoke: bool = True,
+        width: Optional[float] = None,
+        parametrization: Optional[str] = None,
+        **overrides,
+    ) -> "Experiment":
+        """Build from an arch name (``"mup-gpt"``, ``"gemma2-2b"``, ...) or
+        an explicit ModelConfig.  ``smoke`` selects the reduced config;
+        ``width`` scales the muTransfer family; ``parametrization`` swaps
+        the rule (any registered name); other kwargs are config overrides."""
+        if isinstance(arch, ModelConfig):
+            cfg = arch
+        else:
+            cfg = (get_smoke_config if smoke else get_config)(arch)
+        if parametrization is not None:
+            resolve(parametrization)  # fail fast on unknown names
+            cfg = cfg.replace(parametrization=parametrization)
+        if width is not None:
+            cfg = cfg.scaled(width)
+        if overrides:
+            cfg = cfg.replace(**overrides)
+        return cls(cfg=cfg)
+
+    # ------------------------------------------------------------------
+    @property
+    def parametrization(self) -> AbcParametrization:
+        return resolve(self.cfg.parametrization)
+
+    @property
+    def space(self) -> HPSpace:
+        """The muTransferable HP space of this experiment's parametrization."""
+        return self.parametrization.hp_space()
+
+    def replace(self, **cfg_overrides) -> "Experiment":
+        return Experiment(cfg=self.cfg.replace(**cfg_overrides), hps=self.hps)
+
+    # ------------------------------------------------------------------
+    def build(self) -> Model:
+        """The assembled model (params come from ``model.init(rng)``)."""
+        return build_model(self.cfg)
+
+    def optimizer(
+        self,
+        kind: str = "adamw",
+        hps: Optional[HParams] = None,
+        model: Optional[Model] = None,
+        **kw,
+    ) -> Optimizer:
+        """A muP-aware optimizer wired to this experiment's meta/rule/HPs."""
+        hps = hps or self.hps or self.space.hparams()
+        model = model or self.build()
+        kw.setdefault("lr", hps.lr)
+        kw.setdefault("b1", hps.b1)
+        kw.setdefault("b2", hps.b2)
+        kw.setdefault("momentum", hps.momentum)
+        kw.setdefault("lr_embed", hps.lr_embed)
+        return Optimizer.create(
+            kind, parametrization=model.p13n, meta=model.meta, **kw
+        )
+
+    # ------------------------------------------------------------------
+    def proxy(
+        self,
+        width_factor: float = 0.25,
+        depth: Optional[int] = None,
+        min_d_head: int = 32,
+    ) -> "Experiment":
+        """The Algorithm-1 step-2 tuning proxy (same muP base shape)."""
+        return Experiment(
+            cfg=transfer_lib.make_proxy(
+                self.cfg, width_factor=width_factor, depth=depth,
+                min_d_head=min_d_head,
+            ),
+            hps=self.hps,
+        )
+
+    # ------------------------------------------------------------------
+    def coord_check(
+        self,
+        widths: Sequence[float] = (1.0, 2.0, 4.0),
+        steps: int = 3,
+        lr: float = 1e-2,
+        lrs: Optional[Sequence[float]] = None,
+        batch_size: int = 8,
+        seq_len: int = 32,
+        optimizer: str = "adam",
+        seed: int = 0,
+        zero_init: bool = False,
+    ):
+        """App. D.1 coordinate check over width multiples of this config.
+
+        Returns a ``CoordCheckResult`` keyed by actual d_model (or a
+        ``BatchedCoordCheckResult`` when ``lrs`` gives several learning
+        rates to sweep simultaneously).  Under a correct muP-class rule
+        every activation's ``growth`` slope stays ~0.
+        """
+        base = self.cfg.replace(
+            dtype="float32",
+            zero_init_readout=zero_init, zero_init_query=zero_init,
+        )
+        widths = list(widths)
+
+        def make_model(i: int):
+            cfg = base.scaled(widths[i])
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(seed))
+
+            def loss_fn(params, batch):
+                return model.loss_fn(params, batch, collect_acts=True)
+
+            return params, model.meta, loss_fn
+
+        pipe = make_pipeline(base.vocab_size, seq_len, batch_size, seed=seed)
+        batches = [
+            {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+            for t in range(steps)
+        ]
+        res = coord_check_lib.coord_check_batched(
+            make_model, list(range(len(widths))), batches,
+            self.parametrization, optimizer=optimizer,
+            lrs=tuple(lrs) if lrs is not None else (lr,), seed=seed,
+        )
+        # re-key records by the actual model width
+        res.records = {
+            int(base.scaled(widths[i]).d_model): v
+            for i, v in res.records.items()
+        }
+        if lrs is None:
+            return res.candidate_view(0)
+        return res
+
+    # ------------------------------------------------------------------
+    def tune(
+        self,
+        candidates: Optional[Sequence[HParams]] = None,
+        n_samples: int = 16,
+        steps: int = 40,
+        batch_size: int = 8,
+        seq_len: int = 64,
+        seed: int = 0,
+        optimizer: str = "adamw",
+        prune_factor: Optional[float] = None,
+        **kw,
+    ) -> tuning_lib.SweepResult:
+        """Batched HP sweep on *this* experiment's model (call it on the
+        proxy).  Candidates default to ``n_samples`` draws from this
+        parametrization's HP space; the winner is stored on ``self.hps``
+        for a subsequent ``transfer()``/``train()``."""
+        if candidates is None:
+            candidates = self.space.sample_n(n_samples, seed=seed)
+        res = tuning_lib.train_proxy_batched(
+            self.cfg, candidates, steps=steps, batch_size=batch_size,
+            seq_len=seq_len, seed=seed, optimizer=optimizer,
+            prune_factor=prune_factor, **kw,
+        )
+        self.hps = res.best
+        return res
+
+    # ------------------------------------------------------------------
+    def transfer(
+        self, target: Union["Experiment", ModelConfig],
+        hps: Optional[HParams] = None,
+    ) -> "Experiment":
+        """Zero-shot muTransfer (Algorithm 1 step 3): carry this
+        experiment's tuned HPs to ``target`` (validated against the target
+        parametrization's HP space).  Returns the target Experiment."""
+        hps = hps or self.hps
+        if hps is None:
+            raise ValueError(
+                "transfer() needs tuned HPs: call tune() first or pass hps="
+            )
+        cfg = target.cfg if isinstance(target, Experiment) else target
+        transfer_lib.transfer(hps, cfg)  # validation + regularization warning
+        return Experiment(cfg=cfg, hps=hps)
+
+    def transfer_plan(self, hps: Optional[HParams] = None) -> Dict[str, Any]:
+        """The raw (model / optim / schedule) override dict for this
+        experiment's HPs — what ``train()`` applies under the hood."""
+        hps = hps or self.hps or self.space.hparams()
+        return transfer_lib.transfer(hps, self.cfg)
+
+    # ------------------------------------------------------------------
+    def train(
+        self,
+        steps: int = 100,
+        hps: Optional[HParams] = None,
+        batch_size: int = 8,
+        seq_len: int = 128,
+        **kw,
+    ) -> Dict[str, Any]:
+        """Train this experiment's model with its (tuned or given) HPs via
+        the end-to-end driver (``launch.train.train_loop``: sharded step,
+        checkpointing, watchdog).  Returns the driver's metrics dict."""
+        from repro.launch.train import train_loop  # deferred: heavy imports
+
+        hps = hps or self.hps or self.space.hparams()
+        return train_loop(
+            self.cfg, steps=steps, hps=hps, batch_size=batch_size,
+            seq_len=seq_len, **kw,
+        )

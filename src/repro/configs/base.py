@@ -98,6 +98,10 @@ class ModelConfig:
     scan_layers: bool = True
 
     # ---- muP / HPs (the muTransferable set, Table 2) ----------------------
+    # name resolved through repro.core.parametrization's registry ("sp",
+    # "mup", "mup_table3", "mup_table9", "ntk", "umup", or anything passed
+    # to register()) — resolution is lazy so configs can name rules that
+    # are registered later.
     parametrization: str = "mup"
     sigma: float = 1.0                # base init std scale
     alpha_output: float = 1.0
@@ -175,6 +179,13 @@ class ModelConfig:
     def proxy(self, width_factor: float = 0.25, min_d_head: int = 32) -> "ModelConfig":
         """The muTransfer proxy model (Algorithm 1, step 2)."""
         return self.scaled(width_factor, min_d_head=min_d_head)
+
+    def hp_space(self):
+        """The muTransferable HP space of this config's parametrization
+        (per-rule: u-µP drops the sigma axis).  Resolved via the registry."""
+        from repro.core.parametrization import resolve  # lazy: avoid cycle
+
+        return resolve(self.parametrization).hp_space()
 
     def as_base(self) -> "ModelConfig":
         """Re-anchor the muP base shape at this config's own widths."""

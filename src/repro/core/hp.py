@@ -9,90 +9,116 @@ scalars (or stacked ``(N,)`` vectors) that is threaded through
   - ``core.init.init_params``         (sigma -> init std),
   - ``models.model.Model.forward``    (alpha_embed / alpha_output / alpha_attn
                                        forward multipliers),
-  - ``optim.optimizer.Optimizer.update`` (lr override), and
+  - ``optim.optimizer.Optimizer.update`` (lr / lr_embed overrides), and
   - ``optim.schedules``               (traced-safe warmup/decay arithmetic),
 
 so a single ``jax.vmap`` over a stacked :class:`RuntimeHP` trains all N
 candidates simultaneously (see ``core.tuning.batched_train``).
 
-Only per-candidate *scalars* live here.  Structural HPs (optimizer kind,
-schedule shape, b1/b2, width) stay in the config / Optimizer and are shared
-by every candidate in a batch.
+The class itself is **generated** from the HP axis universe
+(``repro.core.hpspace.HP_AXES``): every axis with ``engine == "runtime"``
+becomes one leaf, so the traced bundle can never drift from the declared HP
+space again.  Structural HPs (optimizer kind, schedule shape, b1/b2, width)
+stay in the config / Optimizer and are shared by every candidate in a batch.
+
+``lr_embed`` (App. D.7, the per-layer embedding LR) is a real leaf: ``None``
+means "follow lr" and stacking substitutes the candidate's own ``lr``.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Sequence
+from typing import Any, List, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.transfer import HParams
+from repro.core.hpspace import HP_AXES
+
+RUNTIME_AXES = tuple(a for a in HP_AXES if a.engine == "runtime")
+RUNTIME_NAMES = tuple(a.name for a in RUNTIME_AXES)
 
 
-@functools.partial(
-    jax.tree_util.register_dataclass,
-    data_fields=["lr", "sigma", "alpha_output", "alpha_attn", "alpha_embed"],
-    meta_fields=[],
-)
-@dataclasses.dataclass(frozen=True)
-class RuntimeHP:
-    """Traced per-candidate HP scalars.  Leaves may be Python floats, 0-d
-    arrays (one candidate) or ``(N,)`` arrays (a stacked candidate batch)."""
-
-    lr: Any = 1e-2
-    sigma: Any = 1.0
-    alpha_output: Any = 1.0
-    alpha_attn: Any = 1.0
-    alpha_embed: Any = 1.0
-
-    @staticmethod
-    def from_hparams(hps: HParams) -> "RuntimeHP":
-        return RuntimeHP(
-            lr=hps.lr,
-            sigma=hps.sigma,
-            alpha_output=hps.alpha_output,
-            alpha_attn=hps.alpha_attn,
-            alpha_embed=hps.alpha_embed,
-        )
-
-    @staticmethod
-    def from_config(cfg, lr: float) -> "RuntimeHP":
-        """HPs currently baked into a config, as a runtime bundle."""
-        return RuntimeHP(
-            lr=lr,
-            sigma=cfg.sigma,
-            alpha_output=cfg.alpha_output,
-            alpha_attn=cfg.alpha_attn,
-            alpha_embed=cfg.alpha_embed,
-        )
-
-
-def stack_hparams(candidates: Sequence[HParams]) -> RuntimeHP:
-    """Stack N candidates into a RuntimeHP of ``(N,)`` float32 vectors —
-    the batch axis that ``jax.vmap`` (and the sweep engine) maps over."""
-    if not candidates:
-        raise ValueError("stack_hparams: empty candidate list")
-
-    def col(field: str) -> jax.Array:
-        return jnp.asarray(
-            [getattr(h, field) for h in candidates], jnp.float32
-        )
-
-    return RuntimeHP(
-        lr=col("lr"),
-        sigma=col("sigma"),
-        alpha_output=col("alpha_output"),
-        alpha_attn=col("alpha_attn"),
-        alpha_embed=col("alpha_embed"),
+def runtime_config_axes(cfg) -> tuple:
+    """Names of runtime axes that are also config fields (sigma, alpha_*) —
+    the single place the 'baked into the config' intersection is defined."""
+    return tuple(
+        a.name for a in RUNTIME_AXES
+        if a.name != "lr" and hasattr(cfg, a.name)
     )
 
 
-def hp_at(stack: RuntimeHP, i: int) -> RuntimeHP:
+def _make_runtime_cls():
+    cls = dataclasses.make_dataclass(
+        "RuntimeHP",
+        [
+            (a.name, Any, dataclasses.field(default=a.default))
+            for a in RUNTIME_AXES
+        ],
+        frozen=True,
+        namespace={
+            "__doc__": (
+                "Traced per-candidate HP scalars (generated from "
+                "hpspace.HP_AXES runtime axes: "
+                + ", ".join(RUNTIME_NAMES)
+                + ").  Leaves may be Python floats, 0-d arrays (one "
+                "candidate) or (N,) arrays (a stacked candidate batch); "
+                "None leaves (lr_embed) mean 'follow lr'."
+            ),
+            "replace": lambda self, **kw: dataclasses.replace(self, **kw),
+        },
+    )
+    cls.__module__ = __name__
+    return jax.tree_util.register_dataclass(
+        cls, data_fields=list(RUNTIME_NAMES), meta_fields=[]
+    )
+
+
+RuntimeHP = _make_runtime_cls()
+
+
+def _from_hparams(hps) -> "RuntimeHP":
+    """The runtime slice of an HParams candidate."""
+    return RuntimeHP(**{n: getattr(hps, n) for n in RUNTIME_NAMES})
+
+
+def _from_config(cfg, lr: float) -> "RuntimeHP":
+    """HPs currently baked into a config, as a runtime bundle."""
+    return RuntimeHP(
+        lr=lr, **{n: getattr(cfg, n) for n in runtime_config_axes(cfg)}
+    )
+
+
+RuntimeHP.from_hparams = staticmethod(_from_hparams)
+RuntimeHP.from_config = staticmethod(_from_config)
+
+
+def stack_hparams(candidates: Sequence[Any]) -> "RuntimeHP":
+    """Stack N candidates into a RuntimeHP of ``(N,)`` float32 vectors —
+    the batch axis that ``jax.vmap`` (and the sweep engine) maps over.
+
+    ``lr_embed=None`` entries fall back to that candidate's ``lr`` (the
+    "follow lr" semantics); if *every* candidate leaves it None the leaf
+    stays None and the optimizer skips the per-axis select entirely.
+    """
+    if not candidates:
+        raise ValueError("stack_hparams: empty candidate list")
+
+    def col(field: str):
+        vals = [getattr(h, field) for h in candidates]
+        if all(v is None for v in vals):
+            return None
+        vals = [
+            h.lr if v is None else v for v, h in zip(vals, candidates)
+        ]
+        return jnp.asarray(vals, jnp.float32)
+
+    return RuntimeHP(**{n: col(n) for n in RUNTIME_NAMES})
+
+
+def hp_at(stack: "RuntimeHP", i: int) -> "RuntimeHP":
     """Candidate ``i`` of a stacked RuntimeHP (for serial reference runs)."""
     return jax.tree_util.tree_map(lambda x: x[i], stack)
 
 
-def n_candidates(stack: RuntimeHP) -> int:
+def n_candidates(stack: "RuntimeHP") -> int:
     return int(jnp.shape(stack.lr)[0])

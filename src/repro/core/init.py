@@ -17,13 +17,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.meta import ParamMeta, is_meta
-from repro.core.parametrization import Parametrization
+from repro.core.parametrization import AbcParametrization
 
 
 def init_one(
     rng: jax.Array,
     meta: ParamMeta,
-    parametrization: Parametrization,
+    parametrization: AbcParametrization,
     sigma: float = 1.0,
     dtype: jnp.dtype = jnp.float32,
 ) -> jax.Array:
@@ -41,7 +41,7 @@ def init_one(
 def init_params(
     rng: jax.Array,
     meta: Any,
-    parametrization: Parametrization,
+    parametrization: AbcParametrization,
     sigma: float = 1.0,
     dtype: jnp.dtype = jnp.float32,
 ) -> Any:

@@ -15,11 +15,11 @@ import jax
 
 from repro.core.infshape import InfShape
 from repro.core.parametrization import (
+    AbcParametrization,
     AbcRule,
-    Parametrization,
     Role,
-    abc_rule,
     infer_role,
+    resolve,
 )
 
 
@@ -34,6 +34,13 @@ class ParamMeta:
                 per App. D.2, ones for norm gains).
     init_scale: extra per-tensor sigma factor (per-layer HP, Table 2).
     lr_scale:   extra per-tensor LR factor (per-layer HP, Table 2).
+    lr_axis:    which runtime LR axis drives this tensor: "lr" (master) or
+                "lr_embed" (the App. D.7 per-layer embedding LR).
+    owns_scale: the forward pass honors this tensor's abc multiplier and the
+                tensor owns its init scale.  False for raw-applied tensors
+                (gains/biases/conv kernels/MoE expert weights) and for views
+                of tied tensors — unit-scaling rules (u-µP) leave those on
+                the canonical µP rule (see AbcParametrization.rule).
     sharding:   logical partition spec (tuple of logical axis names or None),
                 resolved to a mesh PartitionSpec by distributed.sharding.
     """
@@ -44,17 +51,20 @@ class ParamMeta:
     init: str = "normal"
     init_scale: float = 1.0
     lr_scale: float = 1.0
+    lr_axis: str = "lr"
+    owns_scale: bool = True
     sharding: Any = None
 
     def resolved_role(self) -> Role:
         return self.role if self.role is not None else infer_role(self.infshape)
 
-    def rule(self, parametrization: Parametrization, sigma: float = 1.0) -> AbcRule:
-        return abc_rule(
-            parametrization,
+    def rule(self, parametrization: AbcParametrization, sigma: float = 1.0) -> AbcRule:
+        return resolve(parametrization).rule(
             self.infshape,
             role=self.resolved_role(),
-            sigma=sigma * self.init_scale,
+            sigma=sigma,
+            init_scale=self.init_scale,
+            owns_scale=self.owns_scale,
         )
 
 

@@ -1,4 +1,4 @@
-"""abc-parametrizations (Definition A.2): SP, muP (Tables 3, 8, 9), NTK.
+"""abc-parametrizations (Definition A.2) as an open, extensible registry.
 
 A *parametrization* is a rule mapping each parameter tensor (classified by its
 InfShape into input-like / hidden / output-like / scalar-like, Appendix B) to
@@ -13,34 +13,41 @@ All width dependence is expressed through the *width multiplier*
 ``n_tilde = fan / base_fan`` so that every rule reduces to SP at the base
 model shape (Eq. (4)) — "parametrization backward compatibility" (App. H).
 
-The default muP formulation is **Table 8** (unified vector-like rules, safe
-for tied input/output embeddings).  Tables 3 and 9 are provided for the
-Lemma J.1 equivalence tests and for users who prefer those formulations.
+Rules are instances of :class:`AbcParametrization` looked up by name in a
+registry — ``register()`` adds a new rule without touching this module, and
+config strings (``cfg.parametrization = "mup"``) resolve through
+:func:`resolve`.  Built-ins:
+
+  - ``sp``          standard parametrization (framework default)
+  - ``mup``         muP, Table 8 formulation (recommended; tied-embedding safe)
+  - ``mup_table3``  muP, Table 3 formulation
+  - ``mup_table9``  muP, Table 9 (Tensor Programs IV style)
+  - ``ntk``         kernel-regime reference (SP init + 1/width LR)
+  - ``umup``        u-µP — unit-scaled µP (Blake et al. 2024): every weight
+                    whose forward multiplier is honored initializes at std 1
+                    and the scale moves into the multiplier, with LR
+                    compensated per Lemma J.1 so the trajectory is exactly
+                    Table 8 µP's (hence exactly SP's at the base shape).
+                    ``sigma`` stops being an HP axis (see ``hp_space()``).
+
+Each instance also owns its muTransferable HP space
+(:meth:`AbcParametrization.hp_space`) and its paper-specific multipliers
+(:meth:`attention_scale`, :meth:`output_logit_mult`).
+
+``Parametrization`` remains as a deprecated enum-shaped shim:
+``Parametrization("mup")``, ``Parametrization.MUP``, ``list(Parametrization)``
+and ``p.is_mup`` all keep working; instances are ``str`` subclasses so they
+compare/hash like the old string enum members.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import math
-from typing import Optional
+from typing import Dict, Iterator, Optional, Tuple, Union
 
+from repro.core import hpspace as hpspace_lib
 from repro.core.infshape import InfShape
-
-
-class Parametrization(str, enum.Enum):
-    SP = "sp"                   # standard parametrization (framework default)
-    MUP = "mup"                 # muP, Table 8 formulation (recommended)
-    MUP_TABLE3 = "mup_table3"   # muP, Table 3 formulation
-    MUP_TABLE9 = "mup_table9"   # muP, Table 9 (Tensor Programs IV style)
-    NTK = "ntk"                 # kernel-regime reference (SP + 1/width LR)
-
-    @property
-    def is_mup(self) -> bool:
-        return self in (
-            Parametrization.MUP,
-            Parametrization.MUP_TABLE3,
-            Parametrization.MUP_TABLE9,
-        )
 
 
 class Role(str, enum.Enum):
@@ -85,41 +92,225 @@ class AbcRule:
         return self.adam_lr_mult if adam_like else self.sgd_lr_mult
 
 
-def abc_rule(
-    parametrization: Parametrization,
-    infshape: InfShape,
-    role: Optional[Role] = None,
-    sigma: float = 1.0,
-) -> AbcRule:
-    """Compute the abc-rule for one tensor.
+def lemma_j1_rescale(rule: AbcRule, theta: float, adam_like: bool) -> AbcRule:
+    """Lemma J.1: (A, B, C) -> (A*theta, B/theta, C/theta^2 [SGD] or C/theta
+    [Adam]) leaves the training trajectory invariant.  Used by the
+    equivalence tests and by the u-µP unit-scaling shift."""
+    if adam_like:
+        return AbcRule(
+            rule.multiplier * theta,
+            rule.init_std / theta,
+            rule.sgd_lr_mult,          # untouched in adam mode
+            rule.adam_lr_mult / theta,
+            rule.wd_mult,
+        )
+    return AbcRule(
+        rule.multiplier * theta,
+        rule.init_std / theta,
+        rule.sgd_lr_mult / (theta * theta),
+        rule.adam_lr_mult,
+        rule.wd_mult,
+    )
 
-    sigma: the tunable base init scale (a muTransferable HP, Table 2); the
-    returned ``init_std`` already folds in the fan and width scaling.
 
-    Width factors (all equal 1 at the base shape):
-      nt_in  = fan_in / base_fan_in   (if fan_in is a width dim)
-      nt_out = fan_out / base_fan_out (if fan_out is a width dim)
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+
+class AbcParametrization(str):
+    """Base class for registrable abc-parametrization rules.
+
+    Instances are ``str`` subclasses whose value is the registry name, so
+    they are drop-in for the old string-enum members: hashable, comparable
+    with plain strings, usable as jit-static arguments and config values.
+
+    Subclasses implement :meth:`rule` and may override
+    :meth:`attention_scale`, :meth:`output_logit_mult`, :meth:`hp_space` and
+    :meth:`validate_config`.
     """
-    role = role or infer_role(infshape)
-    fan_in = max(infshape.fan_in, 1)
-    nt_in = infshape.width_mult
-    nt_out = infshape.fan_out_mult
-    p = parametrization
 
-    if role == Role.SCALAR:
-        # scalar-like: everything constant in width (App. B.2)
-        return AbcRule(1.0, sigma, 1.0, 1.0, 1.0)
+    is_mup: bool = False
+    aliases: Tuple[str, ...] = ()
 
-    if p == Parametrization.SP:
+    def __new__(cls, name: str):
+        return super().__new__(cls, name)
+
+    @property
+    def value(self) -> str:  # old Enum API
+        return str(self)
+
+    # -- per-tensor rule ---------------------------------------------------
+    def rule(
+        self,
+        infshape: InfShape,
+        role: Optional[Role] = None,
+        sigma: float = 1.0,
+        init_scale: float = 1.0,
+        owns_scale: bool = True,
+    ) -> AbcRule:
+        """The abc-rule for one tensor.
+
+        sigma: the tunable base init scale (a muTransferable HP, Table 2);
+        may be a *traced* scalar when the sweep engine threads a RuntimeHP.
+        init_scale: the static per-tensor sigma factor from ParamMeta —
+        kept separate so unit-scaling rules can fold it into their (static)
+        multipliers while the traced sigma stays out of them.  The returned
+        ``init_std`` includes the fan and width scaling.
+
+        owns_scale: True when the forward pass honors this tensor's
+        ``multiplier`` and the tensor owns its init scale.  False for
+        raw-applied tensors (conv kernels, gains/biases, MoE expert weights)
+        and for *views* of tied tensors (the readout view of the embedding)
+        — rules that move init scale into multipliers (u-µP) must leave
+        those on the canonical µP/SP rule.
+        """
+        raise NotImplementedError
+
+    # -- paper-specific multipliers ---------------------------------------
+    def attention_scale(
+        self, d_head: int, base_d_head: int, alpha_attn=1.0
+    ):
+        """Attention logit scale (Definition 4.1 + App. B.1).
+
+        muP-class rules: 1/d attention with base compatibility —
+        ``alpha_attn * sqrt(base_d_head) / d_head`` (== alpha_attn /
+        sqrt(d_head) at the base shape).  SP/NTK: alpha_attn / sqrt(d_head).
+        """
+        if self.is_mup:
+            return alpha_attn * math.sqrt(base_d_head) / d_head
+        return alpha_attn / math.sqrt(d_head)
+
+    def output_logit_mult(self, width_mult: float, alpha_output=1.0):
+        """Multiplier for readout logits — the Table-8 fast path used by
+        MuReadout-style callers.  For formulations whose output factor lives
+        in ``rule(...).multiplier`` (Table 3/9, u-µP) this returns
+        ``alpha_output`` unchanged; use the rule's multiplier instead."""
+        return alpha_output
+
+    # -- HP space + config hooks ------------------------------------------
+    def hp_space(self) -> hpspace_lib.HPSpace:
+        """The muTransferable HP space this rule sweeps (see core.hpspace)."""
+        return hpspace_lib.mup_space()
+
+    def validate_config(self, cfg) -> None:
+        """Raise if a ModelConfig is incompatible with this rule."""
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, AbcParametrization] = {}
+_ORDER: list = []
+
+
+def register(
+    p: AbcParametrization, *, overwrite: bool = False
+) -> AbcParametrization:
+    """Register a parametrization under its name (+ aliases).
+
+    After this, ``cfg.replace(parametrization=str(p))`` selects it everywhere
+    (init, forward multipliers, per-tensor LRs, sweeps) — no core edits.
+    """
+    if not isinstance(p, AbcParametrization):
+        raise TypeError(
+            f"register() takes an AbcParametrization instance, got {type(p)}"
+        )
+    keys = (str(p), *p.aliases)
+    for key in keys:
+        if key in _REGISTRY and not overwrite:
+            raise ValueError(
+                f"parametrization {key!r} is already registered "
+                f"(pass overwrite=True to replace it)"
+            )
+    displaced = [_REGISTRY[k] for k in keys if k in _REGISTRY]
+    for key in keys:
+        _REGISTRY[key] = p
+    # identity (not str-equality) bookkeeping: drop displaced instances that
+    # are no longer reachable under any name, so available_parametrizations()
+    # agrees with resolve() after an overwrite
+    for old in displaced:
+        if old is not p and not any(v is old for v in _REGISTRY.values()):
+            _ORDER[:] = [x for x in _ORDER if x is not old]
+    if not any(x is p for x in _ORDER):
+        _ORDER.append(p)
+    return p
+
+
+def get_parametrization(name: str) -> AbcParametrization:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown parametrization {name!r}; registered: "
+            f"{sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_parametrizations() -> Tuple[AbcParametrization, ...]:
+    """All registered rules (primary instances, registration order)."""
+    return tuple(_ORDER)
+
+
+def resolve(
+    parametrization: Union[str, AbcParametrization]
+) -> AbcParametrization:
+    """Name or instance -> registered instance (the universal entry point)."""
+    if isinstance(parametrization, AbcParametrization):
+        return parametrization
+    return get_parametrization(str(parametrization))
+
+
+# ---------------------------------------------------------------------------
+# built-in rules
+# ---------------------------------------------------------------------------
+
+
+class StandardParametrization(AbcParametrization):
+    """SP: multiplier 1, init sigma/sqrt(fan_in), LR factor 1."""
+
+    def rule(self, infshape, role=None, sigma=1.0, init_scale=1.0,
+             owns_scale=True):
+        role = role or infer_role(infshape)
+        sigma = sigma * init_scale
+        if role == Role.SCALAR:
+            # scalar-like: everything constant in width (App. B.2)
+            return AbcRule(1.0, sigma, 1.0, 1.0, 1.0)
+        fan_in = max(infshape.fan_in, 1)
         return AbcRule(1.0, sigma / math.sqrt(fan_in), 1.0, 1.0, 1.0)
 
-    if p == Parametrization.NTK:
-        # kernel-regime reference: SP init, LR scaled down by width for
-        # width-fan-in tensors (footnote 4 / Sec. 10.4). Not for production.
-        lr = 1.0 / nt_in if role in (Role.HIDDEN, Role.OUTPUT) else 1.0
+
+class NTKParametrization(AbcParametrization):
+    """Kernel-regime reference: SP init, LR scaled down by width for
+    width-fan-in tensors (footnote 4 / Sec. 10.4).  Not for production."""
+
+    def rule(self, infshape, role=None, sigma=1.0, init_scale=1.0,
+             owns_scale=True):
+        role = role or infer_role(infshape)
+        sigma = sigma * init_scale
+        if role == Role.SCALAR:
+            return AbcRule(1.0, sigma, 1.0, 1.0, 1.0)
+        fan_in = max(infshape.fan_in, 1)
+        lr = 1.0 / infshape.width_mult if role in (Role.HIDDEN, Role.OUTPUT) else 1.0
         return AbcRule(1.0, sigma / math.sqrt(fan_in), lr, lr, 1.0)
 
-    if p == Parametrization.MUP:  # Table 8
+
+class MuPTable8(AbcParametrization):
+    """muP, Table 8 formulation (unified vector-like rules, safe for tied
+    input/output embeddings) — the recommended default."""
+
+    is_mup = True
+
+    def rule(self, infshape, role=None, sigma=1.0, init_scale=1.0,
+             owns_scale=True):
+        role = role or infer_role(infshape)
+        sigma = sigma * init_scale
+        if role == Role.SCALAR:
+            return AbcRule(1.0, sigma, 1.0, 1.0, 1.0)
+        fan_in = max(infshape.fan_in, 1)
+        nt_in = infshape.width_mult
+        nt_out = infshape.fan_out_mult
         if role == Role.INPUT:
             return AbcRule(
                 multiplier=1.0,
@@ -143,7 +334,25 @@ def abc_rule(
             adam_lr_mult=1.0,
         )
 
-    if p == Parametrization.MUP_TABLE3:
+    def output_logit_mult(self, width_mult, alpha_output=1.0):
+        return alpha_output / width_mult
+
+
+class MuPTable3(AbcParametrization):
+    """muP, Table 3 formulation (output factor in the init, not the
+    multiplier) — incompatible with tied embeddings."""
+
+    is_mup = True
+
+    def rule(self, infshape, role=None, sigma=1.0, init_scale=1.0,
+             owns_scale=True):
+        role = role or infer_role(infshape)
+        sigma = sigma * init_scale
+        if role == Role.SCALAR:
+            return AbcRule(1.0, sigma, 1.0, 1.0, 1.0)
+        fan_in = max(infshape.fan_in, 1)
+        nt_in = infshape.width_mult
+        nt_out = infshape.fan_out_mult
         if role == Role.INPUT:
             return AbcRule(1.0, sigma / math.sqrt(fan_in), nt_out, 1.0)
         if role == Role.HIDDEN:
@@ -156,7 +365,28 @@ def abc_rule(
             adam_lr_mult=1.0 / nt_in,
         )
 
-    if p == Parametrization.MUP_TABLE9:
+    def validate_config(self, cfg) -> None:
+        if getattr(cfg, "tie_embeddings", False):
+            raise ValueError(
+                "tied embeddings are incompatible with the Table-3 muP "
+                "formulation; use 'mup' (Table 8) or 'mup_table9' (App. B)."
+            )
+
+
+class MuPTable9(AbcParametrization):
+    """muP, Table 9 (Tensor Programs IV style) — Table 3 under Lemma J.1."""
+
+    is_mup = True
+
+    def rule(self, infshape, role=None, sigma=1.0, init_scale=1.0,
+             owns_scale=True):
+        role = role or infer_role(infshape)
+        sigma = sigma * init_scale
+        if role == Role.SCALAR:
+            return AbcRule(1.0, sigma, 1.0, 1.0, 1.0)
+        fan_in = max(infshape.fan_in, 1)
+        nt_in = infshape.width_mult
+        nt_out = infshape.fan_out_mult
         if role == Role.INPUT:
             # Lemma J.1 applied to Table 3 input rules with theta=sqrt(nt_out)
             return AbcRule(
@@ -175,57 +405,128 @@ def abc_rule(
             adam_lr_mult=1.0 / math.sqrt(nt_in),
         )
 
-    raise ValueError(f"unknown parametrization {parametrization!r}")
 
+class UnitMuP(AbcParametrization):
+    """u-µP — the Unit-Scaled Maximal Update Parametrization (Blake et al.
+    2024), anchored at the base shape per this repo's Eq. (4) convention.
 
-def lemma_j1_rescale(rule: AbcRule, theta: float, adam_like: bool) -> AbcRule:
-    """Lemma J.1: (A, B, C) -> (A*theta, B/theta, C/theta^2 [SGD] or C/theta
-    [Adam]) leaves the training trajectory invariant.  Used by the
-    equivalence tests."""
-    if adam_like:
+    Every tensor that owns its scale gets the per-tensor Lemma J.1 rescaling
+    of Table 8 with ``theta = table8_init_std``: weights initialize at std
+    exactly 1, the init scale moves into the forward multiplier, and both
+    SGD and Adam LR factors are compensated (``C/theta^2`` resp. ``C/theta``)
+    so the training trajectory is *identical* to Table 8 µP — and therefore
+    identical to SP at the base shape.  Raw-applied tensors (gains, biases,
+    conv kernels, MoE expert weights) and tied-tensor views keep the Table 8
+    rule unchanged, since the forward pass never applies their multiplier.
+
+    ``sigma`` stops being an HP: init is unit-scale by construction, so the
+    u-µP search space drops the axis (interpretable O(1) HPs — the alpha
+    multipliers carry all scale).  Configs must keep ``sigma == 1``.
+    """
+
+    is_mup = True
+
+    def rule(self, infshape, role=None, sigma=1.0, init_scale=1.0,
+             owns_scale=True):
+        role = role or infer_role(infshape)
+        # sigma is fixed at 1 under u-µP (validate_config / HP space); a
+        # *traced* sigma reaching here is the engine threading the pinned
+        # default, so the shift stays static.  A concrete non-1 sigma (direct
+        # abc_rule calls) is still honored for the J.1 equivalence tests.
+        sig = float(sigma) if isinstance(sigma, (int, float)) else 1.0
+        base = _MUP.rule(infshape, role=role, sigma=sig, init_scale=init_scale)
+        if not owns_scale or role == Role.SCALAR or base.init_std <= 0:
+            return base
+        theta = base.init_std
         return AbcRule(
-            rule.multiplier * theta,
-            rule.init_std / theta,
-            rule.sgd_lr_mult,          # untouched in adam mode
-            rule.adam_lr_mult / theta,
-            rule.wd_mult,
+            multiplier=base.multiplier * theta,
+            init_std=1.0,
+            sgd_lr_mult=base.sgd_lr_mult / (theta * theta),
+            adam_lr_mult=base.adam_lr_mult / theta,
+            wd_mult=base.wd_mult,
         )
-    return AbcRule(
-        rule.multiplier * theta,
-        rule.init_std / theta,
-        rule.sgd_lr_mult / (theta * theta),
-        rule.adam_lr_mult,
-        rule.wd_mult,
-    )
+
+    def hp_space(self) -> hpspace_lib.HPSpace:
+        return hpspace_lib.umup_space()
+
+    def validate_config(self, cfg) -> None:
+        sigma = getattr(cfg, "sigma", 1.0)
+        if sigma != 1.0:
+            raise ValueError(
+                f"u-µP fixes sigma at 1 (unit-scaled init; the scale lives "
+                f"in the alpha multipliers) but the config has "
+                f"sigma={sigma!r}; sweep alpha_* instead"
+            )
+
+
+SP = register(StandardParametrization("sp"))
+_MUP = register(MuPTable8("mup"))
+MUP = _MUP
+MUP_TABLE3 = register(MuPTable3("mup_table3"))
+MUP_TABLE9 = register(MuPTable9("mup_table9"))
+NTK = register(NTKParametrization("ntk"))
+UMUP = register(UnitMuP("umup"))
+
+
+# ---------------------------------------------------------------------------
+# deprecated enum-shaped shim + functional entry points
+# ---------------------------------------------------------------------------
+
+
+class _ParametrizationMeta(type):
+    def __iter__(cls) -> Iterator[AbcParametrization]:
+        return iter(available_parametrizations())
+
+
+class Parametrization(metaclass=_ParametrizationMeta):
+    """Deprecated shim for the old closed enum.
+
+    ``Parametrization("mup")`` resolves through the registry;
+    ``Parametrization.MUP`` etc. are the registered singletons;
+    ``list(Parametrization)`` iterates every registered rule.  New code
+    should use :func:`resolve` / :func:`register` directly.
+    """
+
+    SP = SP
+    MUP = MUP
+    MUP_TABLE3 = MUP_TABLE3
+    MUP_TABLE9 = MUP_TABLE9
+    NTK = NTK
+    UMUP = UMUP
+
+    def __new__(cls, name) -> AbcParametrization:
+        return resolve(name)
+
+
+def abc_rule(
+    parametrization: Union[str, AbcParametrization],
+    infshape: InfShape,
+    role: Optional[Role] = None,
+    sigma: float = 1.0,
+) -> AbcRule:
+    """Compute the abc-rule for one tensor (functional shim over the
+    registry; see :meth:`AbcParametrization.rule`)."""
+    return resolve(parametrization).rule(infshape, role=role, sigma=sigma)
 
 
 def attention_scale(
-    parametrization: Parametrization,
+    parametrization: Union[str, AbcParametrization],
     d_head: int,
     base_d_head: int,
-    alpha_attn: float = 1.0,
-) -> float:
-    """Attention logit scale (Definition 4.1 + App. B.1).
-
-    muP: 1/d attention with base compatibility —
-         alpha_attn * sqrt(base_d_head) / d_head
-         (== alpha_attn / sqrt(d_head) at the base shape).
-    SP/NTK: alpha_attn / sqrt(d_head).
-    """
-    if parametrization.is_mup:
-        return alpha_attn * math.sqrt(base_d_head) / d_head
-    return alpha_attn / math.sqrt(d_head)
+    alpha_attn=1.0,
+):
+    """Attention logit scale (functional shim; see
+    :meth:`AbcParametrization.attention_scale`)."""
+    return resolve(parametrization).attention_scale(
+        d_head, base_d_head, alpha_attn
+    )
 
 
 def output_logit_mult(
-    parametrization: Parametrization,
+    parametrization: Union[str, AbcParametrization],
     width_mult: float,
-    alpha_output: float = 1.0,
-) -> float:
-    """Multiplier for readout logits: alpha_output / nt (muP Table 8) or
-    alpha_output (SP).  For Table 3/9 the factor already lives in AbcRule's
-    multiplier/init, so callers must use `abc_rule(...).multiplier` instead;
-    this helper is the Table-8 fast path used by MuReadout."""
-    if parametrization == Parametrization.MUP:
-        return alpha_output / width_mult
-    return alpha_output
+    alpha_output=1.0,
+):
+    """Readout logit multiplier (functional shim; see
+    :meth:`AbcParametrization.output_logit_mult`)."""
+    return resolve(parametrization).output_logit_mult(width_mult, alpha_output)

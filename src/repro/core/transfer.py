@@ -5,52 +5,32 @@
     3. Copy tuned HPs to the target         -> transfer(hps, target_cfg)
 
 Step 3 is *literally a copy* for the muTransferable set (Table 1/2) — that
-is the paper's point — but this module makes the HP taxonomy explicit and
-loudly rejects transferring regularization HPs.
+is the paper's point.  The HP taxonomy is no longer spelled out here: it is
+generated from the declarative axis registry in :mod:`repro.core.hpspace`
+(:class:`HParams`, ``MU_TRANSFERABLE``, ``NOT_TRANSFERABLE`` and the copy
+plan all derive from the same ``HP_AXES``), and :func:`transfer` validates
+candidates against the *target parametrization's* HP space — so e.g. a
+``sigma``-sweep result cannot be transferred onto a u-µP target.
+Regularization HPs are still loudly refused (Table 1).
 """
 from __future__ import annotations
 
-import dataclasses
 import warnings
 from typing import Any, Dict, Optional
 
 from repro.configs.base import ModelConfig
+from repro.core.hpspace import HParams, HPSpace, mup_space
+from repro.core.parametrization import resolve
 
-# Table 1 taxonomy ----------------------------------------------------------
-MU_TRANSFERABLE = {
-    # optimization
-    "lr", "momentum", "b1", "b2", "schedule", "warmup_steps",
-    # init
-    "sigma",
-    # parameter multipliers
-    "alpha_output", "alpha_attn", "alpha_embed",
-    # per-layer LR scales
-    "lr_embed",
-}
-NOT_TRANSFERABLE = {"dropout", "weight_decay", "label_smoothing"}
+# Table 1 taxonomy — generated from the axis registry (single source).
+MU_TRANSFERABLE = set(mup_space().transferable_names())
+NOT_TRANSFERABLE = set(mup_space().not_transferable_names())
 TRANSFERRED_ACROSS = {"width", "depth", "batch_size", "seq_len", "train_steps"}
 
-
-@dataclasses.dataclass(frozen=True)
-class HParams:
-    """The muTransferable HP bundle swept in tuning (paper's Table 2 set)."""
-
-    lr: float = 1e-2
-    sigma: float = 1.0
-    alpha_output: float = 1.0
-    alpha_attn: float = 1.0
-    alpha_embed: float = 1.0
-    lr_embed: Optional[float] = None      # per-layer LR (App. D.7)
-    schedule: str = "constant"
-    warmup_steps: int = 0
-    b1: float = 0.9
-    b2: float = 0.999
-    # NOT muTransferable — kept so callers see them rejected explicitly
-    weight_decay: float = 0.0
-    dropout: float = 0.0
-
-    def replace(self, **kw) -> "HParams":
-        return dataclasses.replace(self, **kw)
+__all__ = [
+    "HParams", "MU_TRANSFERABLE", "NOT_TRANSFERABLE", "TRANSFERRED_ACROSS",
+    "make_proxy", "transfer", "reverse_transfer",
+]
 
 
 def make_proxy(
@@ -75,29 +55,27 @@ def make_proxy(
     return proxy
 
 
-def transfer(hps: HParams, target: ModelConfig) -> Dict[str, Any]:
+def transfer(
+    hps: HParams, target: ModelConfig, space: Optional[HPSpace] = None
+) -> Dict[str, Any]:
     """Zero-shot transfer: returns (model overrides, optimizer kwargs) to run
     the *target* with the proxy-tuned HPs.  Pure copy for the transferable
-    set; regularization HPs are refused (Table 1)."""
-    if hps.weight_decay or hps.dropout:
+    set — the per-destination plan is generated from the HP space of the
+    target's parametrization; regularization HPs are refused (Table 1)."""
+    space = space or resolve(target.parametrization).hp_space()
+    space.validate([hps], context="transfer")
+    bad_reg = [
+        n for n in space.not_transferable_names()
+        if getattr(hps, n) != space.axis(n).default
+    ]
+    if bad_reg:
         warnings.warn(
-            "weight_decay/dropout are regularization HPs and are NOT "
+            f"{'/'.join(bad_reg)} are regularization HPs and are NOT "
             "muTransferable (Table 1); they will not be copied — retune "
             "them at target scale.",
             stacklevel=2,
         )
-    model_overrides = dict(
-        sigma=hps.sigma,
-        alpha_output=hps.alpha_output,
-        alpha_attn=hps.alpha_attn,
-        alpha_embed=hps.alpha_embed,
-    )
-    optim_kwargs = dict(lr=hps.lr, b1=hps.b1, b2=hps.b2)
-    return {
-        "model": model_overrides,
-        "optim": optim_kwargs,
-        "schedule": {"name": hps.schedule, "warmup_steps": hps.warmup_steps},
-    }
+    return space.transfer_plan(hps)
 
 
 def reverse_transfer(hps: HParams, wide_cfg: ModelConfig, narrow_width: int):

@@ -37,8 +37,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hp import RuntimeHP, stack_hparams
+from repro.core import hpspace as hpspace_lib
+from repro.core.hp import RuntimeHP, runtime_config_axes, stack_hparams
+from repro.core.hpspace import HPSpace
 from repro.core.init import init_params
+from repro.core.parametrization import resolve
 from repro.core.transfer import HParams
 from repro.data.pipeline import make_pipeline
 from repro.models.model import build_model
@@ -50,54 +53,68 @@ from repro.optim import schedules as sched_lib
 EMA_DECAY = 0.7
 
 
-@dataclasses.dataclass
 class SearchSpace:
-    """Log2 grids in the style of App. F.1/F.3."""
+    """Deprecated shim: the App. F.1/F.3 log2 grids now live as per-axis
+    ``search`` lists on :class:`repro.core.hpspace.HPSpace`.  Kept so
+    ``SearchSpace(lr=..., sigma=...)`` call sites keep working; new code
+    should use ``resolve(cfg.parametrization).hp_space()`` directly."""
 
-    lr: Sequence[float] = tuple(5e-3 * 2.0**z for z in np.arange(-3, 3.5, 0.5))
-    sigma: Sequence[float] = tuple(2.0**z for z in range(-3, 3))
-    alpha_output: Sequence[float] = tuple(2.0**z for z in range(-4, 5, 2))
-    alpha_attn: Sequence[float] = tuple(2.0**z for z in range(-2, 5, 2))
-    alpha_embed: Sequence[float] = (1.0, 3.16, 10.0)
+    def __init__(self, space: Optional[HPSpace] = None, **search):
+        self._space = (space or hpspace_lib.mup_space()).with_search(**search)
+
+    @property
+    def space(self) -> HPSpace:
+        return self._space
 
     def sample(self, rng: np.random.RandomState) -> HParams:
-        pick = lambda xs: float(xs[rng.randint(len(xs))])
-        return HParams(
-            lr=pick(self.lr),
-            sigma=pick(self.sigma),
-            alpha_output=pick(self.alpha_output),
-            alpha_attn=pick(self.alpha_attn),
-            alpha_embed=pick(self.alpha_embed),
-        )
+        return self._space.sample(rng)
 
     def sample_n(self, n: int, seed: int = 0) -> List[HParams]:
-        rng = np.random.RandomState(seed)
-        return [self.sample(rng) for _ in range(n)]
+        return self._space.sample_n(n, seed=seed)
+
+    def __getattr__(self, name: str):
+        # old dataclass-style field access: the axis' sweep candidates
+        try:
+            ax = self.__dict__["_space"].axis(name)
+        except KeyError:
+            raise AttributeError(name) from None
+        return ax.search if ax.search is not None else (ax.default,)
 
 
 def grid_candidates(
-    base: Optional[HParams] = None, **fields: Sequence[float]
+    base: Optional[HParams] = None,
+    space: Optional[HPSpace] = None,
+    **fields: Sequence[float],
 ) -> List[HParams]:
     """Cartesian-product HP grid, e.g. ``grid_candidates(lr=LRS, sigma=(0.5, 1))``
     — the Fig. 3/4 sweep shape.  Unswept fields keep ``base``'s values
-    (HParams defaults when no base is given); pass ``base=config_hparams(cfg,
-    lr)`` to sweep around a config's baked HPs instead of all-1.0."""
-    names = list(fields)
-    out: List[HParams] = [base or HParams()]
-    for name in names:
-        out = [
-            h.replace(**{name: float(v)}) for h in out for v in fields[name]
-        ]
-    return out
+    (space defaults when no base is given); pass ``base=config_hparams(cfg,
+    lr)`` to sweep around a config's baked HPs instead of all-1.0.
+
+    Delegates to :meth:`HPSpace.grid`, so axis names are validated and axes
+    the space has fixed (``sigma`` under u-µP) are rejected.
+    """
+    return (space or hpspace_lib.mup_space()).grid(base=base, **fields)
 
 
 def config_hparams(cfg, lr: float) -> HParams:
     """The HP bundle a config would train with when its values are baked in —
     the right ``base`` for grids that sweep one HP of a named config."""
     return HParams(
-        lr=lr, sigma=cfg.sigma, alpha_output=cfg.alpha_output,
-        alpha_attn=cfg.alpha_attn, alpha_embed=cfg.alpha_embed,
+        lr=lr, **{n: getattr(cfg, n) for n in runtime_config_axes(cfg)}
     )
+
+
+def _bake_hp_config(cfg, hps: HParams):
+    """A config with a candidate's runtime HPs baked in as build-time
+    constants (every runtime axis that is also a config field) — the
+    serial/legacy counterpart of threading a RuntimeHP."""
+    kw = {
+        n: getattr(hps, n)
+        for n in runtime_config_axes(cfg)
+        if getattr(hps, n) is not None
+    }
+    return cfg.replace(**kw)
 
 
 # ---------------------------------------------------------------------------
@@ -159,7 +176,10 @@ def make_batched_step(
         loss, grads = jax.value_and_grad(
             lambda p: loss_fn(p, batch, hp)
         )(params)
-        updates, new_opt_state = opt.update(grads, opt_state, params, lr=hp.lr)
+        updates, new_opt_state = opt.update(
+            grads, opt_state, params, lr=hp.lr,
+            lr_embed=getattr(hp, "lr_embed", None),
+        )
         ok = jnp.logical_and(active, jnp.isfinite(loss))
         params = jax.tree_util.tree_map(
             lambda p, u: jnp.where(ok, p + u, p), params, updates
@@ -304,25 +324,26 @@ def _shared_scalar(candidates: Sequence[HParams], field: str):
     return vals.pop()
 
 
-# HParams fields the engine does not implement at all (schedule shape and
-# warmup come in via the ``schedule`` argument; weight_decay/dropout are not
-# muTransferable; lr_embed is a per-layer HP outside the RuntimeHP bundle).
-# Reject non-default values loudly instead of training something else.
-_UNSUPPORTED_FIELDS = (
-    "schedule", "warmup_steps", "weight_decay", "dropout", "lr_embed",
-)
+def _validate_candidates(space: HPSpace, candidates: Sequence[HParams]) -> None:
+    """Engine-side candidate validation, generated from the HP space:
 
-
-def _reject_unsupported(candidates: Sequence[HParams]) -> None:
-    defaults = HParams()
-    for field in _UNSUPPORTED_FIELDS:
-        bad = {getattr(h, field) for h in candidates} - {getattr(defaults, field)}
+    - ``engine="external"`` axes (schedule shape, warmup, regularization)
+      are not implemented by the batched engine — non-default values are
+      rejected loudly instead of training something else;
+    - axes the space has *fixed* (sigma under u-µP) must stay at default.
+    (``engine="shared"`` axes are checked by ``_shared_scalar`` where the
+    shared value is actually consumed.)
+    """
+    for name in space.external_names():
+        default = space.axis(name).default
+        bad = {getattr(h, name) for h in candidates} - {default}
         if bad:
             raise ValueError(
-                f"HParams.{field}={sorted(map(str, bad))} is not applied by "
+                f"HParams.{name}={sorted(map(str, bad))} is not applied by "
                 f"the batched engine (pass schedule= explicitly; retune "
                 f"regularization at target scale); refusing to ignore it"
             )
+    space.validate(candidates, context="sweep")
 
 
 def train_proxy_batched(
@@ -343,24 +364,27 @@ def train_proxy_batched(
 ) -> SweepResult:
     """Train all candidates on the proxy simultaneously (one vmapped trace).
 
-    lr / sigma / alpha_* vary per candidate (traced scalars); b1/b2 and the
-    schedule are structural and must be shared across the batch.  All
+    lr / sigma / alpha_* / lr_embed vary per candidate (traced scalars);
+    b1/b2/momentum and the schedule are structural and must be shared
+    across the batch.  All
     candidates see the same data stream (seed) — HP comparison on identical
     batches — and candidate ``i`` inits from ``fold_in(PRNGKey(seed), i)``
     unless ``rngs`` (an (N, key) array, e.g. one key broadcast N ways for a
     shared-init controlled sweep) says otherwise.
     """
     candidates = list(candidates)
-    b1 = _shared_scalar(candidates, "b1")
-    b2 = _shared_scalar(candidates, "b2")
-    _reject_unsupported(candidates)
+    space = resolve(cfg.parametrization).hp_space()
+    # shared (structural) axes must match across the batch; their names are
+    # Optimizer.create kwargs by construction (b1/b2/momentum)
+    shared = {n: _shared_scalar(candidates, n) for n in space.shared_names()}
+    _validate_candidates(space, candidates)
     cfg = cfg.replace(dtype="float32")
     model = build_model(cfg)
     p13n = model.p13n
     hp_stack = stack_hparams(candidates)
     opt = Optimizer.create(
         optimizer, lr=0.0, parametrization=p13n, meta=model.meta,
-        b1=b1, b2=b2, schedule=schedule or sched_lib.make_schedule("constant"),
+        schedule=schedule or sched_lib.make_schedule("constant"), **shared,
     )
     out = batched_train(
         init_fn=lambda rng, hp: init_params(rng, model.meta, p13n, sigma=hp.sigma),
@@ -391,8 +415,12 @@ def train_proxy_serial(
     """Reference serial loop: one candidate at a time with its HPs baked in
     as Python constants (fresh trace per candidate) — exactly the pre-engine
     behavior, but with the engine's rng/data conventions so results are
-    directly comparable to :func:`train_proxy_batched`."""
+    directly comparable to :func:`train_proxy_batched` — including the
+    engine's candidate validation (same rejections, same scores)."""
     candidates = list(candidates)
+    _validate_candidates(
+        resolve(cfg.parametrization).hp_space(), candidates
+    )
     n = len(candidates)
     cfg = cfg.replace(dtype="float32")
     batches = _proxy_batches(cfg, steps, batch_size, seq_len, seed)
@@ -402,15 +430,14 @@ def train_proxy_serial(
     losses = np.full((n,), np.inf, np.float64)
     active = np.zeros((n,), bool)
     for i, hps in enumerate(candidates):
-        cfg_i = cfg.replace(
-            sigma=hps.sigma, alpha_output=hps.alpha_output,
-            alpha_attn=hps.alpha_attn, alpha_embed=hps.alpha_embed,
-        )
+        cfg_i = _bake_hp_config(cfg, hps)
         model = build_model(cfg_i)
         params = init_params(rngs[i], model.meta, model.p13n, sigma=hps.sigma)
         opt = Optimizer.create(
             optimizer, lr=hps.lr, parametrization=model.p13n, meta=model.meta,
-            b1=hps.b1, b2=hps.b2, schedule=sched_lib.make_schedule("constant"),
+            b1=hps.b1, b2=hps.b2, momentum=hps.momentum,
+            schedule=sched_lib.make_schedule("constant"),
+            lr_embed=hps.lr_embed,
         )
         opt_state = opt.init(params)
 
@@ -451,19 +478,15 @@ def train_proxy(
 
     Single-candidate legacy path (own data stream per seed); sweeps should
     use :func:`train_proxy_batched`."""
-    cfg = cfg.replace(
-        sigma=hps.sigma,
-        alpha_output=hps.alpha_output,
-        alpha_attn=hps.alpha_attn,
-        alpha_embed=hps.alpha_embed,
-        dtype="float32",
-    )
+    _validate_candidates(resolve(cfg.parametrization).hp_space(), [hps])
+    cfg = _bake_hp_config(cfg, hps).replace(dtype="float32")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(seed))
     schedule = sched_lib.make_schedule("constant")
     opt = Optimizer.create(
         optimizer, lr=hps.lr, parametrization=model.p13n, meta=model.meta,
-        b1=hps.b1, b2=hps.b2, schedule=schedule,
+        b1=hps.b1, b2=hps.b2, momentum=hps.momentum, schedule=schedule,
+        lr_embed=hps.lr_embed,
     )
     opt_state = opt.init(params)
     pipe = make_pipeline(cfg.vocab_size, seq_len, batch_size, seed=seed)
@@ -503,8 +526,11 @@ def random_search(
     With ``batched=True`` (default) all samples train simultaneously through
     the vmapped engine on one shared data stream.  ``eval_fn`` (or
     ``batched=False``) falls back to the serial per-trial loop, where trial
-    ``i`` uses data seed ``seed + i`` (the legacy behavior)."""
-    space = space or SearchSpace()
+    ``i`` uses data seed ``seed + i`` (the legacy behavior).
+
+    The default search space comes from the proxy config's parametrization
+    (u-µP proxies sweep the u-µP axis set — no sigma)."""
+    space = space or SearchSpace(resolve(proxy_cfg.parametrization).hp_space())
     rng = np.random.RandomState(seed)
     samples = [space.sample(rng) for _ in range(n_samples)]
     if eval_fn is None and batched:

@@ -31,9 +31,9 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs import get_config, get_smoke_config
+from repro.core.parametrization import available_parametrizations, resolve
 from repro.core.transfer import HParams
 from repro.core.tuning import (
-    SearchSpace,
     SweepResult,
     grid_candidates,
     train_proxy_batched,
@@ -147,7 +147,10 @@ def run_sweep(
     return res
 
 
-def _parse_candidates(ap, args) -> List[HParams]:
+def _parse_candidates(ap, args, cfg) -> List[HParams]:
+    # the sweepable axis set comes from the config's parametrization
+    # (u-µP: no sigma axis) — resolved through the registry
+    space = resolve(cfg.parametrization).hp_space()
     if args.lrs:
         try:
             lrs = tuple(float(x) for x in args.lrs.split(",") if x)
@@ -155,10 +158,19 @@ def _parse_candidates(ap, args) -> List[HParams]:
             ap.error(f"--lrs must be comma-separated floats, got {args.lrs!r}")
         if not lrs:
             ap.error("--lrs is empty")
-        return grid_candidates(lr=lrs, sigma=(args.sigma,))
+        fields = dict(lr=lrs)
+        if not space.axis("sigma").fixed:
+            fields["sigma"] = (args.sigma,)
+        elif args.sigma != 1.0:
+            ap.error(
+                f"--sigma is not an axis of the {space.name} HP space"
+            )
+        try:
+            return grid_candidates(space=space, **fields)
+        except ValueError as e:
+            ap.error(str(e))
     if args.n < 1:
         ap.error("--n must be >= 1")
-    space = SearchSpace()
     return space.sample_n(args.n, seed=args.seed)
 
 
@@ -167,6 +179,9 @@ def main(argv=None):
     ap.add_argument("--arch", default="mup-gpt")
     ap.add_argument("--full", action="store_true",
                     help="full config (default: smoke config)")
+    ap.add_argument("--parametrization", default=None,
+                    choices=[str(p) for p in available_parametrizations()],
+                    help="override the config's rule (registry name)")
     ap.add_argument("--n", type=int, default=16,
                     help="random-search candidate count")
     ap.add_argument("--lrs", default=None,
@@ -183,7 +198,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = (get_config if args.full else get_smoke_config)(args.arch)
-    candidates = _parse_candidates(ap, args)
+    if args.parametrization:
+        cfg = cfg.replace(parametrization=args.parametrization)
+    candidates = _parse_candidates(ap, args, cfg)
     res = run_sweep(
         cfg, candidates, steps=args.steps, batch_size=args.batch_size,
         seq_len=args.seq_len, seed=args.seed, optimizer=args.optimizer,

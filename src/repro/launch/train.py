@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs import get_config, get_smoke_config
+from repro.core.parametrization import available_parametrizations
 from repro.core.transfer import HParams, transfer
 from repro.data.pipeline import make_pipeline
 from repro.distributed.sharding import make_rules, shardings as sharding_ctx
@@ -149,7 +150,7 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-2)
     ap.add_argument("--sigma", type=float, default=1.0)
     ap.add_argument("--parametrization", default="mup",
-                    choices=["sp", "mup", "mup_table9", "ntk"])
+                    choices=[str(p) for p in available_parametrizations()])
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--simulate-failure", type=int, default=None)

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core.infshape import make_infshape
 from repro.core.meta import ParamMeta
-from repro.core.parametrization import Parametrization, Role
+from repro.core.parametrization import AbcParametrization, Role, resolve
 
 # ---------------------------------------------------------------------------
 # meta constructors
@@ -35,6 +35,8 @@ def wmeta(
     role: Optional[Role] = None,
     init_scale: float = 1.0,
     lr_scale: float = 1.0,
+    lr_axis: str = "lr",
+    owns_scale: bool = True,
 ) -> ParamMeta:
     ish = make_infshape(
         shape, base_shape, width_axes, fan_in_axes=fan_in_axes, fan_out_axes=fan_out_axes
@@ -47,6 +49,8 @@ def wmeta(
         sharding=tuple(sharding),
         init_scale=init_scale,
         lr_scale=lr_scale,
+        lr_axis=lr_axis,
+        owns_scale=owns_scale,
     )
 
 
@@ -95,6 +99,7 @@ def gain_meta(name: str, d: int, base_d: int) -> ParamMeta:
         sharding=(None,),
         init="zeros",
         role=Role.INPUT,
+        owns_scale=False,   # applied raw by rmsnorm/layernorm (no multiplier)
     )
 
 
@@ -109,6 +114,7 @@ def bias_meta(name: str, d: int, base_d: int) -> ParamMeta:
         sharding=(None,),
         init="zeros",
         role=Role.INPUT,
+        owns_scale=False,   # added raw (no multiplier)
     )
 
 
@@ -118,14 +124,14 @@ def bias_meta(name: str, d: int, base_d: int) -> ParamMeta:
 
 
 @functools.lru_cache(maxsize=None)
-def _mult_cached(parametrization: Parametrization, meta: ParamMeta) -> float:
+def _mult_cached(parametrization: AbcParametrization, meta: ParamMeta) -> float:
     return meta.rule(parametrization).multiplier
 
 
-def mult_of(meta: ParamMeta, parametrization: Parametrization) -> float:
-    """Static forward multiplier for a tensor (1.0 except muP output-like in
-    Table-8/9 formulations)."""
-    return _mult_cached(parametrization, meta)
+def mult_of(meta: ParamMeta, parametrization: AbcParametrization) -> float:
+    """Static forward multiplier for a tensor (1.0 except output-like in the
+    muP Table-8/9 formulations and everything scale-owning under u-µP)."""
+    return _mult_cached(resolve(parametrization), meta)
 
 
 def apply_w(

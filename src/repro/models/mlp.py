@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.core.init import init_params
 from repro.core.meta import ParamMeta
-from repro.core.parametrization import Parametrization
+from repro.core.parametrization import resolve
 from repro.models.layers import apply_w, bias_meta, dense_meta, mult_of
 
 
@@ -34,7 +34,7 @@ def build_mlp(
     parametrization: str = "mup", sigma: float = 1.0, seed: int = 0,
 ):
     """Returns (params, meta, loss_fn); loss_fn(params, batch) -> (loss, acts)."""
-    p13n = Parametrization(parametrization)
+    p13n = resolve(parametrization)
     meta = mlp_meta(d_in, width, d_out, base_width)
     params = init_params(jax.random.PRNGKey(seed), meta, p13n, sigma)
 

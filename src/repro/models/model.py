@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.init import init_params
 from repro.core.meta import ParamMeta
-from repro.core.parametrization import Parametrization, Role
+from repro.core.parametrization import AbcParametrization, Role, resolve
 from repro.distributed.sharding import shard
 from repro.models import attention as attn_lib
 from repro.models import rglru as rglru_lib
@@ -33,19 +33,25 @@ def _embed_meta(cfg) -> ParamMeta:
     V, D, bD = cfg.vocab_size, cfg.d_model, cfg.base_d_model
     # word embedding: input weight with conceptual fan_in 1 (one-hot input);
     # init var sigma^2 independent of both width and vocab (App. B.1).
+    # lr_axis="lr_embed": its LR follows the App. D.7 per-layer embedding LR
+    # (a runtime HP leaf) instead of the master lr.
     return wmeta(
         "embed", (V, D), (V, bD), width_axes=(1,),
         fan_in_axes=(0,), fan_out_axes=(1,),
         sharding=("vocab", None), role=Role.INPUT,
         init_scale=math.sqrt(V),
+        lr_axis="lr_embed",
     )
 
 
 def _readout_view_meta(cfg) -> ParamMeta:
     V, D, bD = cfg.vocab_size, cfg.d_model, cfg.base_d_model
+    # a *view* of the tied embedding: the underlying tensor owns the init
+    # scale, so unit-scaling rules must not shift this multiplier again.
     return wmeta(
         "readout_view", (D, V), (bD, V), width_axes=(0,),
         fan_in_axes=(0,), fan_out_axes=(1,), sharding=(None, "vocab"),
+        owns_scale=False,
     )
 
 
@@ -90,16 +96,14 @@ class Model:
     meta: Dict[str, Any]
 
     @property
-    def p13n(self) -> Parametrization:
-        return Parametrization(self.cfg.parametrization)
+    def p13n(self) -> AbcParametrization:
+        return resolve(self.cfg.parametrization)
 
     # ------------------------------------------------------------------
     def init(self, rng: jax.Array, dtype=jnp.float32) -> Dict[str, Any]:
-        if self.cfg.tie_embeddings and self.p13n == Parametrization.MUP_TABLE3:
-            raise ValueError(
-                "tied embeddings are incompatible with the Table-3 muP "
-                "formulation; use MUP (Table 8) or MUP_TABLE9 (App. B)."
-            )
+        # registry hook: each rule vetoes configs it cannot parametrize
+        # (Table 3 rejects tied embeddings; u-µP rejects sigma != 1).
+        self.p13n.validate_config(self.cfg)
         return init_params(rng, self.meta, self.p13n, self.cfg.sigma, dtype)
 
     # ------------------------------------------------------------------

@@ -50,11 +50,13 @@ def moe_meta(cfg, name: str) -> Dict[str, ParamMeta]:
             (e, bd, (2 if glu else 1) * bf),
             width_axes=(1, 2), fan_in_axes=(1,), fan_out_axes=(2,),
             sharding=("experts", None, "ffn"),
+            owns_scale=False,  # applied raw in the capacity path (no mult)
         ),
         "wo": wmeta(
             f"{name}.wo", (e, f, d), (e, bf, bd),
             width_axes=(1, 2), fan_in_axes=(1,), fan_out_axes=(2,),
             sharding=("experts", "ffn", None),
+            owns_scale=False,  # applied raw in the capacity path (no mult)
         ),
     }
     return m

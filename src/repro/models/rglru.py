@@ -46,6 +46,7 @@ def rglru_meta(cfg, name: str) -> Dict[str, ParamMeta]:
         "conv_w": wmeta(
             f"{name}.conv_w", (cw, w), (cw, bw), width_axes=(1,),
             fan_in_axes=(0,), fan_out_axes=(1,), sharding=(None, "ffn"),
+            owns_scale=False,  # applied raw inside the causal conv
         ),
         "conv_b": bias_meta(f"{name}.conv_b", w, bw),
         # diagonal-ish gates: full hidden matrices (Griffin uses block-diag;
@@ -57,6 +58,7 @@ def rglru_meta(cfg, name: str) -> Dict[str, ParamMeta]:
         "lam": wmeta(
             f"{name}.lam", (w,), (bw,), width_axes=(0,), fan_in_axes=(0,),
             fan_out_axes=(0,), sharding=(None,), init="normal", init_scale=1.0,
+            owns_scale=False,  # applied raw (softplus'd decay, no mult)
         ),
     }
 

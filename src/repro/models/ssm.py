@@ -48,14 +48,17 @@ def ssd_meta(cfg, name: str) -> Dict[str, ParamMeta]:
         "A_log": wmeta(
             f"{name}.A_log", (nh,), (bnh,), width_axes=(0,), fan_in_axes=(0,),
             fan_out_axes=(0,), sharding=(None,), init="normal", role=Role.INPUT,
+            owns_scale=False,  # applied raw (exp'd decay, no mult)
         ),
         "D_skip": wmeta(
             f"{name}.D_skip", (nh,), (bnh,), width_axes=(0,), fan_in_axes=(0,),
             fan_out_axes=(0,), sharding=(None,), init="ones", role=Role.INPUT,
+            owns_scale=False,  # applied raw (skip gain, no mult)
         ),
         "conv_w": wmeta(
             f"{name}.conv_w", (cw, di + 2 * n), (cw, bdi + 2 * n), width_axes=(1,),
             fan_in_axes=(0,), fan_out_axes=(1,), sharding=(None, None),
+            owns_scale=False,  # applied raw inside the causal conv
         ),
         "conv_b": bias_meta(f"{name}.conv_b", di + 2 * n, bdi + 2 * n),
         "norm_gain": bias_meta(f"{name}.norm_gain", di, bdi),

@@ -22,7 +22,7 @@ from jax.ad_checkpoint import checkpoint_name
 
 from repro.core.infshape import InfDim, InfShape
 from repro.core.meta import ParamMeta
-from repro.core.parametrization import Parametrization, attention_scale
+from repro.core.parametrization import resolve
 from repro.distributed.sharding import shard
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
@@ -165,8 +165,8 @@ def _self_attention(
         q = apply_rope(q, ctx.positions, cfg.rope_theta)
         k = apply_rope(k, ctx.positions, cfg.rope_theta)
     q, k, v = attn_lib.sharded_qkv(q, k, v)
-    scale = attention_scale(
-        Parametrization(p13n), cfg.d_head, cfg.base_d_head, _alpha_attn(cfg, ctx)
+    scale = resolve(p13n).attention_scale(
+        cfg.d_head, cfg.base_d_head, _alpha_attn(cfg, ctx)
     )
 
     new_cache = None
@@ -215,8 +215,8 @@ def _cross_attention(cfg, params, meta, x, ctx: Ctx, cache, p13n):
     B, S = x.shape[:2]
     M = k.shape[1]
     mask = jnp.ones((B, S, M), bool)  # full visibility over memory
-    scale = attention_scale(
-        Parametrization(p13n), cfg.d_head, cfg.base_d_head, _alpha_attn(cfg, ctx)
+    scale = resolve(p13n).attention_scale(
+        cfg.d_head, cfg.base_d_head, _alpha_attn(cfg, ctx)
     )
     out = attn_lib.attend(q, k, v, mask, scale, 0.0)
     out = apply_w(out, params["wo"], meta["wo"], p13n, "bshk,hkd->bsd")
@@ -240,7 +240,7 @@ def apply_block(
     cfg, kind: str, params, meta, x, ctx: Ctx, cache=None
 ) -> Tuple[jax.Array, Any]:
     """One residual block.  Returns (x, new_cache)."""
-    p13n = Parametrization(cfg.parametrization)
+    p13n = resolve(cfg.parametrization)
     eps = cfg.norm_eps
     new_cache: Dict[str, Any] = {}
 

@@ -23,12 +23,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.meta import ParamMeta, tree_map_with_meta
-from repro.core.parametrization import Parametrization
+from repro.core.parametrization import AbcParametrization, resolve
 
 Schedule = Callable[[jax.Array], jax.Array]  # step -> multiplicative factor
 
 
-def _lr_mults(meta: Any, parametrization: Parametrization, adam_like: bool) -> Any:
+def _lr_mults(meta: Any, parametrization: AbcParametrization, adam_like: bool) -> Any:
     """Static per-tensor LR multipliers resolved from the abc rules."""
 
     def one(m: ParamMeta) -> float:
@@ -39,7 +39,7 @@ def _lr_mults(meta: Any, parametrization: Parametrization, adam_like: bool) -> A
     )
 
 
-def _eps_mults(meta: Any, parametrization: Parametrization, scale_eps: bool) -> Any:
+def _eps_mults(meta: Any, parametrization: AbcParametrization, scale_eps: bool) -> Any:
     def one(m: ParamMeta) -> float:
         if not scale_eps or not parametrization.is_mup:
             return 1.0
@@ -51,6 +51,15 @@ def _eps_mults(meta: Any, parametrization: Parametrization, scale_eps: bool) -> 
     )
 
 
+def _embed_lr_mask(meta: Any) -> Any:
+    """1.0 where the tensor's LR is driven by the ``lr_embed`` runtime axis
+    (App. D.7 per-layer embedding LR), 0.0 elsewhere."""
+    return jax.tree_util.tree_map(
+        lambda m: 1.0 if m.lr_axis == "lr_embed" else 0.0,
+        meta, is_leaf=lambda x: isinstance(x, ParamMeta),
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class Optimizer:
     """A purely-functional optimizer; `update` returns *deltas* to add."""
@@ -59,6 +68,8 @@ class Optimizer:
     lr: float
     lr_mults: Any                      # pytree of floats (static per tensor)
     eps_mults: Any
+    lr_embed: Optional[float] = None   # per-layer embedding LR (None: = lr)
+    embed_lr_mask: Any = None          # pytree: 1.0 where lr_embed applies
     b1: float = 0.9
     b2: float = 0.999
     eps: float = 1e-8
@@ -72,7 +83,7 @@ class Optimizer:
     def create(
         kind: str,
         lr: float,
-        parametrization: Parametrization,
+        parametrization: AbcParametrization,
         meta: Any,
         b1: float = 0.9,
         b2: float = 0.999,
@@ -81,10 +92,12 @@ class Optimizer:
         weight_decay: float = 0.0,
         schedule: Optional[Schedule] = None,
         mup_scale_eps: bool = False,
+        lr_embed: Optional[float] = None,
     ) -> "Optimizer":
         kind = kind.lower()
         if kind not in ("sgd", "adam", "adamw", "adagrad"):
             raise ValueError(f"unknown optimizer {kind!r}")
+        parametrization = resolve(parametrization)
         adam_like = kind in ("adam", "adamw", "adagrad")
         if kind == "adam" and weight_decay:
             raise ValueError(
@@ -96,6 +109,8 @@ class Optimizer:
             lr=lr,
             lr_mults=_lr_mults(meta, parametrization, adam_like),
             eps_mults=_eps_mults(meta, parametrization, mup_scale_eps),
+            lr_embed=lr_embed,
+            embed_lr_mask=_embed_lr_mask(meta),
             b1=b1,
             b2=b2,
             eps=eps,
@@ -122,15 +137,34 @@ class Optimizer:
         return self.schedule(count) if self.schedule is not None else jnp.float32(1.0)
 
     def update(
-        self, grads: Any, state: Any, params: Any, lr: Optional[Any] = None
+        self,
+        grads: Any,
+        state: Any,
+        params: Any,
+        lr: Optional[Any] = None,
+        lr_embed: Optional[Any] = None,
     ) -> tuple:
         """Returns (updates, new_state); apply with params + updates.
 
         ``lr`` overrides the master LR for this call and may be a *traced*
         scalar — this is how the batched sweep engine (core.tuning) gives
         each vmapped candidate its own learning rate from one compiled step.
+        ``lr_embed`` likewise overrides the per-layer embedding LR (the
+        ``lr_axis == "lr_embed"`` tensors, App. D.7); None falls back to the
+        statically configured ``self.lr_embed``, then to ``lr``.
         """
         lr = self.lr if lr is None else lr
+        if lr_embed is None:
+            lr_embed = self.lr_embed
+        if lr_embed is None or self.embed_lr_mask is None:
+            lr_of = lambda m: lr  # noqa: E731 — no embed override this call
+        else:
+            lr_of = lambda m: lr + (lr_embed - lr) * m  # noqa: E731
+        mask = (
+            self.embed_lr_mask
+            if self.embed_lr_mask is not None
+            else jax.tree_util.tree_map(lambda _: 0.0, self.lr_mults)
+        )
         count = state["count"] + 1
         sched = self._sched(state["count"]).astype(jnp.float32)
         new_state = {"count": count}
@@ -148,13 +182,16 @@ class Optimizer:
             else:
                 eff = g32
 
-            def upd(g, lr_mult, p):
-                step = -lr * sched * lr_mult * g
+            def upd(g, lr_mult, m, p):
+                lr_t = lr_of(m)
+                step = -lr_t * sched * lr_mult * g
                 if self.weight_decay:
-                    step = step - lr * sched * self.weight_decay * p
+                    step = step - lr_t * sched * self.weight_decay * p
                 return step.astype(p.dtype)
 
-            updates = jax.tree_util.tree_map(upd, eff, self.lr_mults, params)
+            updates = jax.tree_util.tree_map(
+                upd, eff, self.lr_mults, mask, params
+            )
             return updates, new_state
 
         if self.kind == "adagrad":
@@ -163,16 +200,17 @@ class Optimizer:
             )
             new_state["nu"] = nu
 
-            def upd(g, v, lr_mult, em, p):
-                step = -lr * sched * lr_mult * g / (
+            def upd(g, v, lr_mult, em, m, p):
+                lr_t = lr_of(m)
+                step = -lr_t * sched * lr_mult * g / (
                     jnp.sqrt(v) + self.eps * em
                 )
                 if self.weight_decay:
-                    step = step - lr * sched * self.weight_decay * p
+                    step = step - lr_t * sched * self.weight_decay * p
                 return step.astype(p.dtype)
 
             updates = jax.tree_util.tree_map(
-                upd, g32, nu, self.lr_mults, self.eps_mults, params
+                upd, g32, nu, self.lr_mults, self.eps_mults, mask, params
             )
             return updates, new_state
 
@@ -189,19 +227,20 @@ class Optimizer:
         bc1 = 1.0 - self.b1**c
         bc2 = 1.0 - self.b2**c
 
-        def upd(m, v, lr_mult, em, p):
+        def upd(m, v, lr_mult, em, msk, p):
+            lr_t = lr_of(msk)
             mhat = m / bc1
             vhat = v / bc2
-            step = -lr * sched * lr_mult * mhat / (
+            step = -lr_t * sched * lr_mult * mhat / (
                 jnp.sqrt(vhat) + self.eps * em
             )
             if self.kind == "adamw" and self.weight_decay:
                 # decoupled, master-LR-scaled: width-independent
-                step = step - lr * sched * self.weight_decay * p
+                step = step - lr_t * sched * self.weight_decay * p
             return step.astype(p.dtype)
 
         updates = jax.tree_util.tree_map(
-            upd, mu, nu, self.lr_mults, self.eps_mults, params
+            upd, mu, nu, self.lr_mults, self.eps_mults, mask, params
         )
         return updates, new_state
 

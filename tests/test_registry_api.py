@@ -1,0 +1,469 @@
+"""The PR-3 API seams: parametrization registry, unified HPSpace, Experiment.
+
+Covers, per the redesign's acceptance criteria:
+
+  - ``register()`` accepts a new rule without editing core (selectable from
+    a config string end to end),
+  - every registered muP-class rule passes a coordinate check (activation
+    scales flat in width — u-µP included) and every registered rule reduces
+    exactly to SP at the base shape (Eq. 4 backward compatibility),
+  - u-µP: unit init, per-rule HP space (no sigma axis), config validation,
+  - HParams / RuntimeHP / SearchSpace / transfer() are all generated from
+    the single HP_AXES registry (no duplicate field lists),
+  - ``lr_embed`` is a real runtime leaf (regression for the old silent
+    ignore) threaded through both the batched engine and the serial path,
+  - the Experiment façade wires proxy -> tune -> transfer -> train.
+"""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import Experiment
+from repro.configs import get_smoke_config
+from repro.core.coord_check import coord_check
+from repro.core.hp import RUNTIME_NAMES, RuntimeHP, stack_hparams
+from repro.core.hpspace import HP_AXES, HParams, mup_space, umup_space
+from repro.core.meta import flatten_meta
+from repro.core.parametrization import (
+    AbcParametrization,
+    AbcRule,
+    Role,
+    abc_rule,
+    available_parametrizations,
+    infer_role,
+    register,
+    resolve,
+)
+from repro.core.transfer import MU_TRANSFERABLE, NOT_TRANSFERABLE, transfer
+from repro.core.tuning import (
+    SearchSpace,
+    grid_candidates,
+    train_proxy_batched,
+    train_proxy_serial,
+)
+from repro.data.pipeline import make_pipeline
+from repro.models.model import build_model
+from repro.optim.optimizer import Optimizer, apply_updates
+
+REGISTERED = [str(p) for p in available_parametrizations()]
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _train_losses(cfg, p13n, optimizer="adam", steps=3, lr=1e-2, seed=0):
+    cfg = cfg.replace(parametrization=p13n, dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = Optimizer.create(
+        optimizer, lr=lr, parametrization=model.p13n, meta=model.meta
+    )
+    state = opt.init(params)
+    pipe = make_pipeline(cfg.vocab_size, 32, 4, seed=seed)
+
+    @jax.jit
+    def step(params, state, batch):
+        loss, g = jax.value_and_grad(model.loss_fn)(params, batch)
+        updates, state = opt.update(g, state, params)
+        return apply_updates(params, updates), state, loss
+
+    losses = []
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+        params, state, loss = step(params, state, batch)
+        losses.append(float(loss))
+    return losses
+
+
+# ---------------------------------------------------------------------------
+# registry mechanics
+# ---------------------------------------------------------------------------
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        for name in ("sp", "mup", "mup_table3", "mup_table9", "ntk", "umup"):
+            assert name in REGISTERED
+            assert str(resolve(name)) == name
+
+    def test_resolve_accepts_instances_and_strings(self):
+        p = resolve("mup")
+        assert resolve(p) is p
+        assert p == "mup"  # str-subclass compatibility
+
+    def test_unknown_name_lists_registered(self):
+        with pytest.raises(ValueError, match="unknown parametrization"):
+            resolve("not-a-rule")
+
+    def test_register_rejects_duplicates(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register(type(resolve("sp"))("sp"))
+
+    def test_register_overwrite_keeps_registry_consistent(self):
+        """After an overwrite, resolve() and available_parametrizations()
+        must return the *same* instance (identity, not str-equality)."""
+        name = "test_overwrite_rule"
+        a = register(type(resolve("sp"))(name), overwrite=True)
+        b = register(type(resolve("ntk"))(name), overwrite=True)
+        assert resolve(name) is b
+        listed = [p for p in available_parametrizations() if p == name]
+        assert len(listed) == 1 and listed[0] is b
+        assert not any(p is a for p in available_parametrizations())
+
+    def test_custom_rule_without_editing_core(self):
+        """The acceptance criterion: a new rule registers from user code and
+        is selectable from a config string through the whole stack."""
+
+        class DoubleSigmaSP(AbcParametrization):
+            def rule(self, infshape, role=None, sigma=1.0, init_scale=1.0,
+                     owns_scale=True):
+                role = role or infer_role(infshape)
+                s = 2.0 * sigma * init_scale
+                if role == Role.SCALAR:
+                    return AbcRule(1.0, s, 1.0, 1.0, 1.0)
+                fan_in = max(infshape.fan_in, 1)
+                return AbcRule(1.0, s / math.sqrt(fan_in), 1.0, 1.0, 1.0)
+
+        register(DoubleSigmaSP("test_2sigma_sp"), overwrite=True)
+        cfg = get_smoke_config("mup-gpt").replace(
+            parametrization="test_2sigma_sp", dtype="float32",
+            zero_init_readout=False, zero_init_query=False,
+        )
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        # the custom rule reached init: block weights have 2x the SP std
+        sp_params = build_model(
+            cfg.replace(parametrization="sp")
+        ).init(jax.random.PRNGKey(0))
+        w = params["groups"]["0_attn"]["attn"]["wk"]
+        w_sp = sp_params["groups"]["0_attn"]["attn"]["wk"]
+        assert float(jnp.std(w)) == pytest.approx(2 * float(jnp.std(w_sp)), rel=0.05)
+        # ... and the engine accepts the config string end to end
+        losses = _train_losses(cfg, "test_2sigma_sp", steps=2)
+        assert all(np.isfinite(losses))
+
+
+# ---------------------------------------------------------------------------
+# Eq. 4 / App. H: every registered rule == SP at the base shape
+# ---------------------------------------------------------------------------
+
+class TestSPReductionAtBase:
+    @pytest.mark.parametrize("p13n", REGISTERED)
+    def test_trajectory_equals_sp_at_base(self, p13n):
+        """Parametrization backward compatibility, parametrized over the
+        registry: at the base model shape every rule trains bit-for-bit
+        (modulo Adam-eps rounding for unit-scaled rules) like SP."""
+        cfg = get_smoke_config("mup-gpt").replace(
+            zero_init_query=False, zero_init_readout=False,
+            tie_embeddings=False,  # Table 3 compatibility
+        )
+        sp = _train_losses(cfg, "sp")
+        other = _train_losses(cfg, p13n)
+        for a, b in zip(sp, other):
+            assert a == pytest.approx(b, rel=2e-4), (p13n, sp, other)
+
+
+# ---------------------------------------------------------------------------
+# coordinate check, parametrized over the registry's muP-class rules
+# ---------------------------------------------------------------------------
+
+WIDTHS = [1.0, 2.0, 4.0]
+MUP_RULES = [
+    str(p) for p in available_parametrizations() if p.is_mup
+]
+
+
+class TestRegistryCoordCheck:
+    def _growth(self, p13n, steps=3, lr=2e-2):
+        base = get_smoke_config("mup-gpt").replace(
+            dtype="float32", n_layers=2, zero_init_readout=False,
+            zero_init_query=False, tie_embeddings=False,
+        )
+
+        def make_model(i):
+            cfg = base.scaled(WIDTHS[i]).replace(parametrization=p13n)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+
+            def loss_fn(params, batch):
+                return model.loss_fn(params, batch, collect_acts=True)
+
+            return params, model.meta, loss_fn
+
+        pipe = make_pipeline(256, 32, 8, seed=0)
+        batches = [
+            {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+            for t in range(steps)
+        ]
+        res = coord_check(
+            make_model, list(range(len(WIDTHS))), batches,
+            resolve(p13n), optimizer="adam", lr=lr,
+        )
+        res.records = {int(64 * WIDTHS[i]): v for i, v in res.records.items()}
+        return res.growth("logits.delta", t=-1)
+
+    @pytest.mark.parametrize("p13n", MUP_RULES)
+    def test_mup_class_rules_flat_in_width(self, p13n):
+        """Every registered muP-class rule (u-µP included) keeps logit
+        updates Theta(1) in width (App. D.1 / Fig. 5)."""
+        g = self._growth(p13n)
+        assert g < 0.1, f"{p13n}: logit updates grew with width (slope {g})"
+
+    def test_sp_blows_up_for_contrast(self):
+        assert self._growth("sp") > 0.3
+
+
+# ---------------------------------------------------------------------------
+# u-µP specifics
+# ---------------------------------------------------------------------------
+
+class TestUnitMuP:
+    def test_unit_init(self):
+        """u-µP's headline property: scale-owning weights init at std 1."""
+        cfg = get_smoke_config("mup-gpt").replace(
+            parametrization="umup", dtype="float32",
+        )
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        flat_meta = flatten_meta(model.meta)
+        checked = 0
+        for path, m in flat_meta.items():
+            if m.init != "normal" or not m.owns_scale:
+                continue
+            leaf = params
+            for k in path.split("."):
+                leaf = leaf[int(k) if k.isdigit() else k]
+            assert float(jnp.std(leaf)) == pytest.approx(1.0, rel=0.1), path
+            checked += 1
+        assert checked >= 5  # embed + attention/MLP matrices
+
+    def test_rule_is_j1_shift_of_table8(self):
+        from repro.core.infshape import make_infshape
+
+        for mk in (
+            make_infshape((256, 256), (64, 64), (0, 1), (0,), (1,)),
+            make_infshape((10, 256), (10, 64), (1,), (0,), (1,)),
+            make_infshape((256, 10), (64, 10), (0,), (0,), (1,)),
+        ):
+            r8 = abc_rule("mup", mk)
+            ru = abc_rule("umup", mk)
+            theta = r8.init_std
+            assert ru.init_std == 1.0
+            assert ru.multiplier == pytest.approx(r8.multiplier * theta)
+            assert ru.adam_lr_mult == pytest.approx(r8.adam_lr_mult / theta)
+            assert ru.sgd_lr_mult == pytest.approx(r8.sgd_lr_mult / theta**2)
+
+    def test_hp_space_has_no_sigma_axis(self):
+        assert umup_space().axis("sigma").fixed
+        assert "sigma" not in [a.name for a in umup_space().swept_axes()]
+        assert "sigma" in [a.name for a in mup_space().swept_axes()]
+        # sampling never moves sigma off 1.0
+        assert all(
+            h.sigma == 1.0 for h in umup_space().sample_n(8, seed=0)
+        )
+
+    def test_engine_rejects_sigma_sweep(self):
+        cfg = get_smoke_config("mup-gpt").replace(parametrization="umup")
+        with pytest.raises(ValueError, match="fixed"):
+            train_proxy_batched(
+                cfg, [HParams(lr=1e-2, sigma=2.0)], steps=2, batch_size=4,
+                seq_len=32,
+            )
+
+    def test_config_validation_rejects_sigma(self):
+        cfg = get_smoke_config("mup-gpt").replace(
+            parametrization="umup", sigma=2.0
+        )
+        with pytest.raises(ValueError, match="sigma"):
+            build_model(cfg).init(jax.random.PRNGKey(0))
+
+    def test_transfer_rejects_sigma_onto_umup_target(self):
+        cfg = get_smoke_config("mup-gpt").replace(parametrization="umup")
+        with pytest.raises(ValueError, match="fixed"):
+            transfer(HParams(lr=1e-2, sigma=0.5), cfg)
+
+
+# ---------------------------------------------------------------------------
+# HPSpace is the single source (no duplicated field lists)
+# ---------------------------------------------------------------------------
+
+class TestHPSpaceSingleSource:
+    def test_hparams_generated_from_axes(self):
+        assert [f.name for f in dataclasses.fields(HParams)] == [
+            a.name for a in HP_AXES
+        ]
+
+    def test_runtime_hp_generated_from_axes(self):
+        assert [f.name for f in dataclasses.fields(RuntimeHP)] == list(
+            RUNTIME_NAMES
+        )
+        assert set(RUNTIME_NAMES) == {
+            a.name for a in HP_AXES if a.engine == "runtime"
+        }
+        assert "lr_embed" in RUNTIME_NAMES  # the old drift, now a real leaf
+
+    def test_taxonomy_generated(self):
+        assert MU_TRANSFERABLE == set(mup_space().transferable_names())
+        assert NOT_TRANSFERABLE == set(mup_space().not_transferable_names())
+        assert not (MU_TRANSFERABLE & NOT_TRANSFERABLE)
+
+    def test_searchspace_shim_delegates(self):
+        ss = SearchSpace(lr=(1e-3, 1e-2))
+        assert ss.lr == (1e-3, 1e-2)
+        assert all(h.lr in (1e-3, 1e-2) for h in ss.sample_n(4, seed=0))
+
+    def test_grid_validates_axis_names(self):
+        with pytest.raises(KeyError, match="unknown HP axis"):
+            grid_candidates(not_an_axis=(1.0, 2.0))
+
+    def test_transfer_plan_covers_all_transferable_dests(self):
+        plan = transfer(HParams(lr=0.02), get_smoke_config("mup-gpt"))
+        planned = set(plan["model"]) | set(plan["optim"]) | {
+            "schedule" if k == "name" else k for k in plan["schedule"]
+        }
+        expected = {
+            a.dest_key or a.name
+            for a in HP_AXES if a.dest is not None and a.transferable
+        }
+        expected = {"schedule" if k == "name" else k for k in expected}
+        assert planned == expected
+
+
+# ---------------------------------------------------------------------------
+# lr_embed: a real runtime leaf (regression for the silent-ignore drift)
+# ---------------------------------------------------------------------------
+
+class TestLrEmbedRuntimeLeaf:
+    def _cfg(self):
+        return get_smoke_config("mup-gpt").proxy(0.5, min_d_head=16)
+
+    def test_lr_embed_changes_training(self):
+        """Same init, same data: a candidate with a different embedding LR
+        must train differently — the old engine silently dropped it."""
+        cfg = self._cfg()
+        key = jax.random.PRNGKey(0)
+        rngs = jnp.broadcast_to(key[None], (3,) + key.shape)
+        res = train_proxy_batched(
+            cfg,
+            [
+                HParams(lr=1e-2),                      # lr_embed follows lr
+                HParams(lr=1e-2, lr_embed=1e-1),       # 10x embedding LR
+                HParams(lr=1e-2, lr_embed=1e-2),       # == lr, explicitly
+            ],
+            steps=4, batch_size=4, seq_len=32, rngs=rngs,
+        )
+        assert res.losses[0] != res.losses[1]
+        assert res.losses[0] == pytest.approx(res.losses[2], abs=0.0)
+
+    def test_batched_matches_serial_with_lr_embed(self):
+        """Runtime-threaded lr_embed == statically baked lr_embed."""
+        cfg = self._cfg()
+        cands = [HParams(lr=1e-2, lr_embed=3e-2)]
+        b = train_proxy_batched(cfg, cands, steps=4, batch_size=4, seq_len=32)
+        s = train_proxy_serial(cfg, cands, steps=4, batch_size=4, seq_len=32)
+        np.testing.assert_allclose(b.curves, s.curves, rtol=1e-5, atol=1e-6)
+
+    def test_stack_hparams_fills_none_with_lr(self):
+        st = stack_hparams([HParams(lr=0.01), HParams(lr=0.02, lr_embed=0.5)])
+        np.testing.assert_allclose(np.asarray(st.lr_embed), [0.01, 0.5])
+        st2 = stack_hparams([HParams(lr=0.01), HParams(lr=0.02)])
+        assert st2.lr_embed is None
+
+    def test_momentum_is_shared_and_applied(self):
+        """momentum is a shared structural axis: candidate batches must agree
+        on it, and the agreed value actually reaches the SGD update."""
+        cfg = self._cfg()
+        with pytest.raises(ValueError, match="momentum"):
+            train_proxy_batched(
+                cfg, [HParams(lr=1e-2), HParams(lr=1e-2, momentum=0.9)],
+                steps=2, batch_size=4, seq_len=32, optimizer="sgd",
+            )
+        plain = train_proxy_batched(
+            cfg, [HParams(lr=1e-2)], steps=4, batch_size=4, seq_len=32,
+            optimizer="sgd",
+        )
+        heavy = train_proxy_batched(
+            cfg, [HParams(lr=1e-2, momentum=0.9)], steps=4, batch_size=4,
+            seq_len=32, optimizer="sgd",
+        )
+        assert plain.losses[0] != heavy.losses[0]
+        serial = train_proxy_serial(
+            cfg, [HParams(lr=1e-2, momentum=0.9)], steps=4, batch_size=4,
+            seq_len=32, optimizer="sgd",
+        )
+        np.testing.assert_allclose(
+            heavy.curves, serial.curves, rtol=1e-5, atol=1e-6
+        )
+
+    def test_serial_path_validates_like_batched(self):
+        """The serial reference applies the same candidate rejections as the
+        engine (external axes can't silently train something else)."""
+        cfg = self._cfg()
+        with pytest.raises(ValueError, match="not applied"):
+            train_proxy_serial(
+                cfg, [HParams(lr=1e-2, weight_decay=0.1)], steps=2,
+                batch_size=4, seq_len=32,
+            )
+
+    def test_transfer_carries_lr_embed(self):
+        plan = transfer(
+            HParams(lr=1e-2, lr_embed=3e-2), get_smoke_config("mup-gpt")
+        )
+        assert plan["optim"]["lr_embed"] == 3e-2
+
+    def test_only_embedding_on_lr_embed_axis(self):
+        meta = flatten_meta(build_model(get_smoke_config("mup-gpt")).meta)
+        on_axis = [k for k, m in meta.items() if m.lr_axis == "lr_embed"]
+        assert on_axis == ["embed"]
+
+
+# ---------------------------------------------------------------------------
+# Experiment façade
+# ---------------------------------------------------------------------------
+
+class TestExperimentFacade:
+    def test_proxy_tune_transfer_train(self):
+        exp = Experiment.from_config("mup-gpt", dtype="float32")
+        proxy = exp.proxy(width_factor=0.5, min_d_head=16)
+        assert proxy.cfg.base_d_model == exp.cfg.base_d_model
+
+        res = proxy.tune(
+            candidates=[HParams(lr=5e-3), HParams(lr=1e-2)],
+            steps=3, batch_size=4, seq_len=32,
+        )
+        assert proxy.hps is res.best
+
+        target = proxy.transfer(exp)
+        assert target.hps is res.best
+        out = target.train(steps=2, batch_size=4, seq_len=32, log_every=0)
+        assert np.isfinite(out["final_loss"])
+
+    def test_space_follows_parametrization(self):
+        assert Experiment.from_config("mup-gpt").space.name == "mup"
+        assert (
+            Experiment.from_config("mup-gpt", parametrization="umup")
+            .space.name == "umup"
+        )
+
+    def test_coord_check_entry_point(self):
+        exp = Experiment.from_config(
+            "mup-gpt", dtype="float32", n_layers=2
+        )
+        res = exp.coord_check(widths=(1.0, 2.0), steps=2)
+        assert set(res.records) == {64, 128}
+
+    def test_transfer_requires_hps(self):
+        exp = Experiment.from_config("mup-gpt")
+        with pytest.raises(ValueError, match="tune"):
+            exp.transfer(exp)
+
+    def test_build_and_optimizer_wiring(self):
+        exp = Experiment.from_config("mup-gpt", dtype="float32")
+        model = exp.build()
+        opt = exp.optimizer(hps=HParams(lr=2e-3, lr_embed=1e-3), model=model)
+        assert opt.lr == 2e-3
+        assert opt.lr_embed == 1e-3
