@@ -1,0 +1,159 @@
+"""Backward-pass memory/step-time benchmark for the Pallas kernel suite.
+
+The headline claim (ISSUE 4 acceptance): with the chunked cross-entropy
+kernel, ``Model.loss_fn``'s peak temp memory no longer scales with a
+materialized f32 ``(B, S, V)`` log-prob tensor — only with the logits the
+readout already produces.  This script measures it two ways on a
+vocab-32k config:
+
+  op-level    jit(grad(masked CE)) over (B, S, V) logits: XLA's
+              memory_analysis().temp_size_in_bytes for the naive
+              log-softmax formulation vs ops.softmax_cross_entropy under
+              each impl, plus walltime.
+  model-level the real Model.loss_fn (mup-gpt smoke config widened to
+              vocab 32k): temp bytes of jit(value_and_grad(loss_fn)) with
+              the naive materialized log-softmax loss (the pre-kernel
+              formulation, reproduced inline) vs the shipped chunked-CE
+              loss.
+
+On CPU the kernel path runs on the Pallas interpreter (same kernel body,
+chunk-by-chunk schedule); walltime there reflects interpreter overhead and
+only the memory column is meaningful — run on TPU for kernel step times.
+
+    PYTHONPATH=src python -m benchmarks.perf_backward --vocab 32768 \
+        --batch 4 --seq 512
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _compiled_stats(fn, *args):
+    """(temp_bytes, output_bytes, walltime_ms) of jit(fn)(*args)."""
+    jfn = jax.jit(fn)
+    compiled = jfn.lower(*args).compile()
+    mem = compiled.memory_analysis()
+    temp = getattr(mem, "temp_size_in_bytes", None) if mem else None
+    # warmup + time (single rep for interpreter-speed paths)
+    t0 = time.perf_counter()
+    jax.block_until_ready(jfn(*args))
+    warm = time.perf_counter() - t0
+    n = 1 if warm > 2.0 else 3
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = jfn(*args)
+    jax.block_until_ready(out)
+    ms = (time.perf_counter() - t0) / n * 1e3
+    return temp, ms
+
+
+def _fmt_gib(b):
+    return "n/a" if b is None else f"{b / 2**30:8.3f}"
+
+
+def bench_op_level(B, S, V, impls):
+    from repro.kernels import ops, ref
+
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (B, S, V), jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(1), (B, S), -1, V)
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+
+    def naive(x):
+        # the pre-kernel Model.loss_fn formulation: full (B, S, V) f32
+        # log-softmax, then a gather
+        logp = jax.nn.log_softmax(x, axis=-1)
+        ll = jnp.take_along_axis(
+            logp, jnp.maximum(labels, 0)[..., None], axis=-1
+        )[..., 0]
+        return -jnp.sum(ll * mask) / denom
+
+    def routed(impl):
+        def f(x):
+            losses = ops.softmax_cross_entropy(x, labels, impl=impl)
+            return jnp.sum(losses * mask) / denom
+        return f
+
+    print(f"\n== op level: grad of masked CE over ({B}, {S}, {V}) f32 logits "
+          f"(logits themselves: {logits.nbytes / 2**30:.3f} GiB) ==")
+    print(f"{'path':24s} {'temp GiB':>10s} {'ms/step':>10s}")
+    rows = {}
+    for name, f in [("naive log_softmax", naive)] + [
+        (f"ops CE impl={i}", routed(i)) for i in impls
+    ]:
+        temp, ms = _compiled_stats(jax.grad(f), logits)
+        rows[name] = temp
+        print(f"{name:24s} {_fmt_gib(temp):>10s} {ms:10.1f}")
+    return rows
+
+
+def bench_model_level(B, S, V):
+    from repro.configs import get_smoke_config
+    from repro.data.pipeline import make_pipeline
+    from repro.kernels import ops
+    from repro.models.model import build_model
+
+    cfg = get_smoke_config("mup-gpt").replace(
+        dtype="float32", vocab_size=V, max_seq_len=S
+    )
+    model = build_model(cfg)
+    naive_model = build_model(cfg.replace(naive_loss=True))
+    params = model.init(jax.random.PRNGKey(0))
+    pipe = make_pipeline(V, S, B, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch(0).items()}
+
+    def chunked_loss(p):
+        return model.loss_fn(p, batch)
+
+    def interpret_loss(p):
+        # the kernel schedule on the Pallas interpreter (CPU stand-in for
+        # the TPU path): this is what bounds peak memory off the logits
+        os.environ["REPRO_KERNELS"] = "interpret"
+        try:
+            return model.loss_fn(p, batch)
+        finally:
+            del os.environ["REPRO_KERNELS"]
+
+    def naive_loss(p):
+        # cfg.naive_loss=True: the pre-kernel materialized log-softmax CE
+        return naive_model.loss_fn(p, batch)
+
+    print(f"\n== model level: value_and_grad(Model.loss_fn), "
+          f"{cfg.name} vocab={V} batch={B} seq={S} ==")
+    print(f"{'path':24s} {'temp GiB':>10s} {'ms/step':>10s}")
+    rows = [
+        ("naive log_softmax", naive_loss),
+        ("ops CE (shipped)", chunked_loss),
+        ("ops CE interpret", interpret_loss),
+    ]
+    for name, f in rows:
+        temp, ms = _compiled_stats(jax.value_and_grad(f), params)
+        print(f"{name:24s} {_fmt_gib(temp):>10s} {ms:10.1f}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--vocab", type=int, default=32768)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument(
+        "--impls", default="ref,interpret",
+        help="comma list of ops impls to compare (add 'pallas' on TPU)",
+    )
+    ap.add_argument("--skip-model", action="store_true")
+    args = ap.parse_args()
+
+    print(f"backend: {jax.default_backend()}")
+    bench_op_level(args.batch, args.seq, args.vocab, args.impls.split(","))
+    if not args.skip_model:
+        bench_model_level(args.batch, args.seq, args.vocab)
+
+
+if __name__ == "__main__":
+    main()

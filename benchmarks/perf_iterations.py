@@ -61,6 +61,11 @@ VARIANTS: Dict[str, Dict[str, Any]] = {
         "extra_overrides": {"attn_acc": "bfloat16"},
     },
     "bf16_gather": {"extra_overrides": {"bf16_param_gather": True}},
+    # pre-kernel CE formulation (materialized (B,S,V) log-softmax) vs the
+    # shipped ops.softmax_cross_entropy path — records the chunked-CE
+    # temp-memory win in the dry-run cost model (see benchmarks/
+    # perf_backward.py for the op-level measurement)
+    "naive_ce": {"extra_overrides": {"naive_loss": True}},
     "remat_full": {"remat": "full"},
     "dp_remat": {"rules_patch": DP_ONLY_PATCH, "remat": "full"},
     "remat_blocks": {"remat": "blocks"},

@@ -1,0 +1,52 @@
+#!/usr/bin/env python
+"""Regenerate the golden coord-check fixtures in tests/golden/.
+
+Run after an *intentional* numerics change (new kernel, changed scaling
+rule), review the diff, and commit the updated JSON:
+
+    PYTHONPATH=src python scripts/gen_coord_goldens.py
+
+The compute lives in tests/test_coord_golden.py so the generator and the
+assertion can never drift apart.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, os.path.join(REPO, "tests"))
+
+from test_coord_golden import (  # noqa: E402
+    GOLDEN_PATH,
+    LR,
+    PARAMETRIZATIONS,
+    STEPS,
+    WIDTHS,
+    compute_records,
+)
+
+
+def main():
+    out = {
+        "__meta__": {
+            "parametrizations": list(PARAMETRIZATIONS),
+            "widths": list(WIDTHS),
+            "steps": STEPS,
+            "lr": LR,
+        }
+    }
+    for p13n in PARAMETRIZATIONS:
+        print(f"coord check: {p13n} ...", flush=True)
+        out[p13n] = compute_records(p13n)
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -80,6 +80,9 @@ class ModelConfig:
 
     # ---- kernels ------------------------------------------------------------
     use_pallas: bool = False          # TPU target: Pallas flash-attention path
+    naive_loss: bool = False          # debug/benchmark: materialized
+                                      # log-softmax CE instead of the chunked
+                                      # ops.softmax_cross_entropy path
 
     # ---- distributed-training tricks ---------------------------------------
     # "tp": TP over the model axis + FSDP (default, big models)

@@ -1,0 +1,192 @@
+"""Fused chunked softmax-cross-entropy Pallas kernel (forward + backward).
+
+The naive loss path materializes a full f32 ``(B, S, V)`` log-softmax (plus
+its autodiff residual) — at the scales muTransfer targets (GPT-3 vocab 50k,
+seq 2k) that tensor, not the weights, dominates training memory.  This
+kernel never forms it:
+
+  forward  — grid (row_blocks, vocab_chunks): an online logsumexp (running
+             max ``m`` and denominator ``l`` in VMEM scratch, exactly the
+             flash-attention recurrence over vocab chunks) plus a running
+             gather of the label logit via an iota == label compare.  At the
+             last chunk it writes per-row ``loss = lse - x[label]`` and the
+             per-row ``lse`` residual — O(N) output for O(N·V) input.
+
+  backward — grid (row_blocks, vocab_chunks), embarrassingly parallel:
+             ``dlogits = (exp(x - lse) - onehot(label)) * g`` recomputed
+             chunk-by-chunk from the stashed (N,) lse; the only residuals
+             are logits (the primal input), labels, and lse.
+
+Labels are int32 row indices into the vocab axis; out-of-range (clamped
+masked) labels simply gather whatever logit they point at — masking is the
+caller's contract (see ops.softmax_cross_entropy / Model.loss_fn: cotangents
+of masked rows are zero, so their dlogits vanish).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.3819763e38
+
+
+def _ce_fwd_kernel(
+    x_ref, lab_ref, loss_ref, lse_ref, m_ref, l_ref, acc_ref,
+    *, bv: int, nv: int,
+):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # (br, bv)
+    lab = lab_ref[...]                                    # (br, 1) int32
+    col = vi * bv + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+
+    m_prev = m_ref[...]                                   # (br, 1)
+    l_prev = l_ref[...]
+    m_cur = jnp.max(x, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    l_new = jnp.exp(m_prev - m_new) * l_prev + jnp.sum(
+        jnp.exp(x - m_new), axis=-1, keepdims=True
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    # running gather of the label logit: at most one hit across all chunks
+    hit = col == lab
+    acc_ref[...] += jnp.sum(jnp.where(hit, x, 0.0), axis=-1, keepdims=True)
+
+    @pl.when(vi == nv - 1)
+    def _finalize():
+        lse = m_ref[...] + jnp.log(jnp.maximum(l_ref[...], 1e-30))
+        loss_ref[...] = lse - acc_ref[...]
+        lse_ref[...] = lse
+
+
+def _ce_bwd_kernel(x_ref, lab_ref, lse_ref, g_ref, dx_ref, *, bv: int):
+    vi = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)                    # (br, bv)
+    lab = lab_ref[...]                                    # (br, 1)
+    lse = lse_ref[...]                                    # (br, 1)
+    g = g_ref[...]                                        # (br, 1) f32
+    col = vi * bv + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    p = jnp.exp(x - lse)
+    d = (p - (col == lab).astype(jnp.float32)) * g
+    dx_ref[...] = d.astype(dx_ref.dtype)
+
+
+def _fwd_call(x2, lab2, *, br, bv, interpret):
+    N, V = x2.shape
+    nr, nv = N // br, V // bv
+    return pl.pallas_call(
+        functools.partial(_ce_fwd_kernel, bv=bv, nv=nv),
+        grid=(nr, nv),
+        in_specs=[
+            pl.BlockSpec((br, bv), lambda r, v: (r, v)),
+            pl.BlockSpec((br, 1), lambda r, v: (r, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, 1), lambda r, v: (r, 0)),
+            pl.BlockSpec((br, 1), lambda r, v: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),    # loss
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),    # lse residual
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((br, 1), jnp.float32),             # running max
+            pltpu.VMEM((br, 1), jnp.float32),             # running denom
+            pltpu.VMEM((br, 1), jnp.float32),             # label logit
+        ],
+        interpret=interpret,
+    )(x2, lab2)
+
+
+def _bwd_call(x2, lab2, lse, g, *, br, bv, interpret):
+    N, V = x2.shape
+    nr, nv = N // br, V // bv
+    return pl.pallas_call(
+        functools.partial(_ce_bwd_kernel, bv=bv),
+        grid=(nr, nv),
+        in_specs=[
+            pl.BlockSpec((br, bv), lambda r, v: (r, v)),
+            pl.BlockSpec((br, 1), lambda r, v: (r, 0)),
+            pl.BlockSpec((br, 1), lambda r, v: (r, 0)),
+            pl.BlockSpec((br, 1), lambda r, v: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bv), lambda r, v: (r, v)),
+        out_shape=jax.ShapeDtypeStruct((N, V), x2.dtype),
+        interpret=interpret,
+    )(x2, lab2, lse, g)
+
+
+@functools.lru_cache(maxsize=None)
+def _ce_fn(br, bv, interpret):
+    """Differentiable chunked CE over pre-tiled (N, V) logits, (N, 1) labels.
+
+    Returns per-row loss (N, 1) f32.  Labels are non-differentiable (float0
+    cotangent).
+    """
+
+    @jax.custom_vjp
+    def fn(x2, lab2):
+        loss, _ = _fwd_call(x2, lab2, br=br, bv=bv, interpret=interpret)
+        return loss
+
+    def fwd(x2, lab2):
+        loss, lse = _fwd_call(x2, lab2, br=br, bv=bv, interpret=interpret)
+        return loss, (x2, lab2, lse)
+
+    def bwd(res, g):
+        x2, lab2, lse = res
+        dx2 = _bwd_call(
+            x2, lab2, lse, g.astype(jnp.float32),
+            br=br, bv=bv, interpret=interpret,
+        )
+        return dx2, np.zeros(lab2.shape, jax.dtypes.float0)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def cross_entropy(
+    logits: jax.Array,     # (..., V)
+    labels: jax.Array,     # (...) int — clamped to [0, V)
+    *,
+    block_rows: int = 256,
+    block_v: int = 2048,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-position softmax cross entropy, f32, shape ``logits.shape[:-1]``.
+
+    Requires V % min(block_v, V) == 0 (vocab chunks must tile); rows are
+    padded internally.  Use kernels.ops.softmax_cross_entropy for the
+    dispatching wrapper.
+    """
+    V = logits.shape[-1]
+    lead = logits.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    bv = min(block_v, V)
+    assert V % bv == 0, (V, bv)
+    x2 = logits.reshape(rows, V)
+    lab2 = jnp.clip(labels.reshape(rows, 1).astype(jnp.int32), 0, V - 1)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, V), x2.dtype)], axis=0)
+        lab2 = jnp.concatenate([lab2, jnp.zeros((pad, 1), jnp.int32)], axis=0)
+    fn = _ce_fn(br, bv, bool(interpret))
+    loss = fn(x2, lab2)
+    if pad:
+        loss = loss[:rows]
+    return loss.reshape(lead)

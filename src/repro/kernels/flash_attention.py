@@ -1,4 +1,4 @@
-"""Flash attention Pallas TPU kernel.
+"""Flash attention Pallas TPU kernel — forward and recomputation backward.
 
 TPU-native design (not a CUDA port):
   - HBM -> VMEM tiling via BlockSpec: q tile (bq, d_head), k/v tiles
@@ -14,24 +14,66 @@ TPU-native design (not a CUDA port):
     an argument — Definition 4.1 is a compile-time constant here).
   - GQA: the kv-head block index is derived from the q-head grid index.
 
-Validated against kernels/ref.py (pure jnp oracle) in interpret=True mode on
-CPU across shape/dtype sweeps (tests/test_kernels.py).
+Backward (Dao et al. 2022 style, recomputation-based):
+  - the forward additionally emits the per-row logsumexp ``lse = m + log l``
+    (shape (B, H, S)); softmax probabilities are *recomputed* blockwise in
+    the backward kernels as ``p = exp(logits - lse)`` instead of stashing
+    the (S, T) matrix — O(S) residual memory instead of O(S^2).
+  - dq kernel: grid (B, H, nq, nk) — for each q tile, accumulate
+    ``dq += ds @ k`` over kv tiles in VMEM scratch.
+  - dk/dv kernel: grid (B, K, nk, G, nq) — for each kv tile, accumulate
+    ``dv += p^T @ do`` and ``dk += ds^T @ q`` over the (group, q-tile)
+    inner dims, summing the G query heads of a GQA group in-kernel so the
+    dk/dv written to HBM are already (B, T, K, d).
+  - ``delta = rowsum(do * o)`` (the softmax-jacobian correction) is a cheap
+    elementwise reduce done in plain jnp between the two kernels.
+  - softcap backward: the tanh derivative is computed from the *pre-mask*
+    logits so masked positions contribute exactly 0 (never NaN via
+    0 * inf).
+
+``flash_attention`` is differentiable: it carries a ``jax.custom_vjp``
+whose forward saves (q, k, v, o, lse) and whose backward runs the two
+Pallas kernels above.  Validated — values and gradients — against
+kernels/ref.py (pure jnp oracle) in interpret=True mode on CPU across
+shape/dtype sweeps (tests/test_kernels.py, tests/test_kernel_grads.py).
 """
 from __future__ import annotations
 
 import functools
-import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -2.3819763e38
 
 
+def _block_visible(q_start, k_start, bq, bk, causal: bool, window: int):
+    """Whether any (q, k) pair in the tile pair is visible (trace-time expr)."""
+    needed = True
+    if causal:
+        needed = k_start <= q_start + bq - 1
+    if window:
+        in_window = (k_start + bk - 1) >= (q_start - window + 1)
+        needed = jnp.logical_and(needed, in_window) if causal else in_window
+    return needed
+
+
+def _tile_mask(q_start, k_start, bq, bk, seq_len, causal: bool, window: int):
+    """(bq, bk) bool visibility mask for one tile pair."""
+    q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_idx < seq_len
+    if causal:
+        mask &= k_idx <= q_idx
+    if window:
+        mask &= (q_idx - k_idx) < window
+    return mask
+
+
 def _flash_kernel(
-    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
     *, scale: float, causal: bool, window: int, softcap: float,
     bq: int, bk: int, nk: int, seq_len: int,
 ):
@@ -49,12 +91,7 @@ def _flash_kernel(
 
     # block-level skip: no k in this block is visible from any q in the q
     # block (strictly above the diagonal, or entirely left of the window)
-    needed = True
-    if causal:
-        needed = k_start <= q_start + bq - 1
-    if window:
-        in_window = (k_start + bk - 1) >= (q_start - window + 1)
-        needed = jnp.logical_and(needed, in_window) if causal else in_window
+    needed = _block_visible(q_start, k_start, bq, bk, causal, window)
 
     @pl.when(needed)
     def _compute():
@@ -64,13 +101,7 @@ def _flash_kernel(
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
-        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = k_idx < seq_len
-        if causal:
-            mask &= k_idx <= q_idx
-        if window:
-            mask &= (q_idx - k_idx) < window
+        mask = _tile_mask(q_start, k_start, bq, bk, seq_len, causal, window)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_ref[...]                                 # (bq, 1)
@@ -91,6 +122,266 @@ def _flash_kernel(
         l = l_ref[...]
         out = acc_ref[...] / jnp.maximum(l, 1e-30)
         o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+        lse = m_ref[...] + jnp.log(jnp.maximum(l, 1e-30))
+        lse_ref[0, 0, :] = lse[:, 0]
+
+
+def _recompute_p_ds(
+    q, k, v, do, lse_row, delta_row, q_start, k_start,
+    *, scale, causal, window, softcap, bq, bk, seq_len,
+):
+    """Shared backward tile math: recompute p and ds = dL/d(pre-cap logits).
+
+    All inputs f32: q/do (bq, d), k/v (bk, d), lse_row/delta_row (bq, 1).
+    Returns (p, ds), both (bq, bk).
+    """
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap:
+        t = jnp.tanh(s / softcap)
+        s = softcap * t
+    mask = _tile_mask(q_start, k_start, bq, bk, seq_len, causal, window)
+    # p is exactly the forward softmax: exp(masked logits - lse); masked
+    # entries are exp(NEG_INF - lse) = 0, written explicitly to avoid
+    # overflow paths.
+    p = jnp.where(mask, jnp.exp(s - lse_row), 0.0)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_row)
+    if softcap:
+        # d tanh-cap: derivative from the *pre-mask* tanh, finite everywhere;
+        # masked positions already have ds = 0 via p = 0.
+        ds = ds * (1.0 - t * t)
+    return p, ds * scale
+
+
+def _flash_bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, acc_ref,
+    *, scale: float, causal: bool, window: int, softcap: float,
+    bq: int, bk: int, nk: int, seq_len: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    q_start = qi * bq
+    k_start = ki * bk
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    needed = _block_visible(q_start, k_start, bq, bk, causal, window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        lse_row = lse_ref[0, 0, :][:, None]
+        delta_row = delta_ref[0, 0, :][:, None]
+        _, ds = _recompute_p_ds(
+            q, k, v, do, lse_row, delta_row, q_start, k_start,
+            scale=scale, causal=causal, window=window, softcap=softcap,
+            bq=bq, bk=bk, seq_len=seq_len,
+        )
+        acc_ref[...] += jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        dq_ref[0, :, 0, :] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    dk_acc_ref, dv_acc_ref,
+    *, scale: float, causal: bool, window: int, softcap: float,
+    bq: int, bk: int, nq: int, n_group: int, seq_len: int,
+):
+    ki = pl.program_id(2)
+    gi = pl.program_id(3)
+    qi = pl.program_id(4)
+    q_start = qi * bq
+    k_start = ki * bk
+
+    @pl.when(jnp.logical_and(gi == 0, qi == 0))
+    def _init():
+        dk_acc_ref[...] = jnp.zeros_like(dk_acc_ref)
+        dv_acc_ref[...] = jnp.zeros_like(dv_acc_ref)
+
+    needed = _block_visible(q_start, k_start, bq, bk, causal, window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        lse_row = lse_ref[0, 0, :][:, None]
+        delta_row = delta_ref[0, 0, :][:, None]
+        p, ds = _recompute_p_ds(
+            q, k, v, do, lse_row, delta_row, q_start, k_start,
+            scale=scale, causal=causal, window=window, softcap=softcap,
+            bq=bq, bk=bk, seq_len=seq_len,
+        )
+        dv_acc_ref[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+        dk_acc_ref[...] += jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(gi == n_group - 1, qi == nq - 1))
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_acc_ref[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc_ref[...].astype(dv_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers
+# ---------------------------------------------------------------------------
+
+def _fwd_call(q, k, v, *, scale, causal, window, softcap, bq, bk, interpret):
+    B, S, H, d = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    nq, nk = S // bq, T // bk
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, nk=nk, seq_len=T,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, H, d), q.dtype),
+            jax.ShapeDtypeStruct((B, H, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),   # acc
+            pltpu.VMEM((bq, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((bq, 1), jnp.float32),   # l (running denom)
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _bwd_dq_call(
+    q, k, v, do, lse, delta, *, scale, causal, window, softcap, bq, bk,
+    interpret,
+):
+    B, S, H, d = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    nq, nk = S // bq, T // bk
+    kernel = functools.partial(
+        _flash_bwd_dq_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, nk=nk, seq_len=T,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, bq, 1, d), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi)),
+            pl.BlockSpec((1, 1, bq), lambda b, h, qi, ki: (b, h, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+def _bwd_dkv_call(
+    q, k, v, do, lse, delta, *, scale, causal, window, softcap, bq, bk,
+    interpret,
+):
+    B, S, H, d = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    nq, nk = S // bq, T // bk
+    kernel = functools.partial(
+        _flash_bwd_dkv_kernel,
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, nq=nq, n_group=G, seq_len=T,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(B, K, nk, G, nq),
+        in_specs=[
+            pl.BlockSpec(
+                (1, bq, 1, d), lambda b, kh, ki, g, qi: (b, qi, kh * G + g, 0)
+            ),
+            pl.BlockSpec((1, bk, 1, d), lambda b, kh, ki, g, qi: (b, ki, kh, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, kh, ki, g, qi: (b, ki, kh, 0)),
+            pl.BlockSpec(
+                (1, bq, 1, d), lambda b, kh, ki, g, qi: (b, qi, kh * G + g, 0)
+            ),
+            pl.BlockSpec((1, 1, bq), lambda b, kh, ki, g, qi: (b, kh * G + g, qi)),
+            pl.BlockSpec((1, 1, bq), lambda b, kh, ki, g, qi: (b, kh * G + g, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, 1, d), lambda b, kh, ki, g, qi: (b, ki, kh, 0)),
+            pl.BlockSpec((1, bk, 1, d), lambda b, kh, ki, g, qi: (b, ki, kh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, K, d), jnp.float32),
+            jax.ShapeDtypeStruct((B, T, K, d), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, d), jnp.float32),   # dk accumulator
+            pltpu.VMEM((bk, d), jnp.float32),   # dv accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp plumbing
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(scale, causal, window, softcap, bq, bk, interpret):
+    """A differentiable flash-attention closure for one static config.
+
+    Cached so repeated calls with the same static config reuse one
+    custom_vjp instance (and its jaxpr cache entries).
+    """
+    kw = dict(
+        scale=scale, causal=causal, window=window, softcap=softcap,
+        bq=bq, bk=bk, interpret=interpret,
+    )
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        o, _ = _fwd_call(q, k, v, **kw)
+        return o
+
+    def fwd(q, k, v):
+        o, lse = _fwd_call(q, k, v, **kw)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        # softmax-jacobian correction, rowsum(do * o): cheap elementwise
+        # reduce in plain jnp, laid out (B, H, S) to match lse tiles.
+        delta = jnp.sum(
+            do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1
+        ).transpose(0, 2, 1)
+        dq = _bwd_dq_call(q, k, v, do, lse, delta, **kw)
+        dk, dv = _bwd_dkv_call(q, k, v, do, lse, delta, **kw)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    fn.defvjp(fwd, bwd)
+    return fn
 
 
 def flash_attention(
@@ -106,40 +397,17 @@ def flash_attention(
     block_k: int = 128,
     interpret: bool = False,
 ) -> jax.Array:
-    """Pallas flash attention; shapes must tile (S % block_q == 0 etc. after
-    internal clamping).  Use kernels.ops.attention for the auto-fallback
-    wrapper."""
+    """Pallas flash attention, differentiable (custom_vjp backward kernels);
+    shapes must tile (S % block_q == 0 etc. after internal clamping).  Use
+    kernels.ops.attention for the auto-fallback wrapper."""
     B, S, H, d = q.shape
     T, K = k.shape[1], k.shape[2]
     assert H % K == 0
-    G = H // K
     bq = min(block_q, S)
     bk = min(block_k, T)
     assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
-    nq, nk = S // bq, T // bk
-
-    kernel = functools.partial(
-        _flash_kernel,
-        scale=scale, causal=causal, window=window, softcap=softcap,
-        bq=bq, bk=bk, nk=nk, seq_len=T,
+    fn = _flash_fn(
+        float(scale), bool(causal), int(window), float(softcap),
+        bq, bk, bool(interpret),
     )
-    grid = (B, H, nq, nk)
-    from jax.experimental.pallas import tpu as pltpu
-
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, 1, d), lambda b, h, qi, ki: (b, qi, h, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda b, h, qi, ki: (b, ki, h // G, 0)),
-            pl.BlockSpec((1, bk, 1, d), lambda b, h, qi, ki: (b, ki, h // G, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, 1, d), lambda b, h, qi, ki: (b, qi, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, S, H, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq, d), jnp.float32),   # acc
-            pltpu.VMEM((bq, 1), jnp.float32),   # m (running max)
-            pltpu.VMEM((bq, 1), jnp.float32),   # l (running denom)
-        ],
-        interpret=interpret,
-    )(q, k, v)
+    return fn(q, k, v)

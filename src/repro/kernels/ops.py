@@ -3,64 +3,188 @@
 The model code calls these; on TPU they run the Pallas kernels, on CPU they
 either interpret the kernel (tests) or fall back to the jnp reference
 (everything else, incl. the dry-run, which lowers pure XLA).
+
+Dispatch contract (shared by every op here):
+
+  impl="auto"       pallas on TPU, ref elsewhere.  ``REPRO_KERNELS`` in the
+                    environment overrides the auto resolution (the CI
+                    interpret job sets ``REPRO_KERNELS=interpret`` so kernel
+                    *bodies* — not just the refs — run on every PR).  Shapes
+                    the kernel cannot tile silently fall back to ref: auto
+                    promises a correct answer, not a kernel.
+  impl="pallas"     the compiled Pallas kernel, or ValueError if the shape
+                    does not tile.  Never a silent ref fallback — a test
+                    that requests the kernel must fail loudly rather than
+                    pass against the oracle it meant to check.
+  impl="interpret"  the same kernel body on the Pallas interpreter (CPU
+                    tests); same strict no-fallback rule.
+  impl="ref"        the pure-jnp oracle from kernels/ref.py.
+
+Resolution (auto -> concrete) and tileability checks run in thin python
+wrappers *outside* the jit boundary, so the jitted inner functions are keyed
+on the concrete impl — an ``REPRO_KERNELS`` change can never hit a stale
+cache entry compiled for a different impl.
+
+All three ops are differentiable under every impl: the ref path by plain
+autodiff, the kernel paths via the custom_vjp backward kernels in their
+modules (flash_attention.py, rmsnorm.py, cross_entropy.py).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
+import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import cross_entropy as ce
 from repro.kernels import flash_attention as fa
 from repro.kernels import ref
 from repro.kernels import rmsnorm as rn
+
+_IMPLS = ("auto", "pallas", "interpret", "ref")
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _resolve_impl(impl: str) -> str:
+    """auto -> concrete impl (env override first, then backend)."""
+    if impl not in _IMPLS:
+        raise ValueError(f"impl must be one of {_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        impl = os.environ.get("REPRO_KERNELS", "auto")
+        if impl not in _IMPLS:
+            raise ValueError(f"REPRO_KERNELS must be one of {_IMPLS}")
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+def _reject_untileable(op: str, impl: str, requested: str, detail: str) -> None:
+    """Explicitly-requested kernels never silently fall back to ref."""
+    if requested == "auto":
+        return  # caller asked for "a correct answer": ref is fine
+    raise ValueError(
+        f"ops.{op}: impl={impl!r} was requested explicitly but the shape "
+        f"does not tile ({detail}); refusing to silently fall back to the "
+        f"jnp reference. Use impl='auto' for best-effort dispatch or fix "
+        f"the block size."
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "scale", "causal", "window", "softcap", "block_q", "block_k", "impl",
+        "causal", "window", "softcap", "block_q", "block_k", "impl",
     ),
 )
-def attention(
-    q, k, v, *, scale: float, causal: bool = True, window: int = 0,
-    softcap: float = 0.0, block_q: int = 128, block_k: int = 128,
-    impl: str = "auto",
+def _attention_jit(
+    q, k, v, scale, *, causal, window, softcap, block_q, block_k, impl
 ):
-    """impl: "auto" (pallas on TPU, ref elsewhere), "pallas", "interpret",
-    "ref"."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
     if impl == "ref":
         return ref.attention_ref(
             q, k, v, scale=scale, causal=causal, window=window, softcap=softcap
         )
-    S, T = q.shape[1], k.shape[1]
-    bq, bk = min(block_q, S), min(block_k, T)
-    if S % bq or T % bk:
-        # non-tileable shapes: reference path
-        return ref.attention_ref(
-            q, k, v, scale=scale, causal=causal, window=window, softcap=softcap
-        )
+    # fold the (possibly traced) scale into q; softmax(q@kT * c) == softmax(
+    # (q*c)@kT), and the multiply stays outside the custom_vjp so autodiff
+    # routes d(scale) automatically.
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
     return fa.flash_attention(
-        q, k, v, scale=scale, causal=causal, window=window, softcap=softcap,
-        block_q=bq, block_k=bk, interpret=(impl == "interpret"),
+        qs, k, v, scale=1.0, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=(impl == "interpret"),
     )
 
 
+def attention(
+    q, k, v, *, scale, causal: bool = True, window: int = 0,
+    softcap: float = 0.0, block_q: int = 128, block_k: int = 128,
+    impl: str = "auto",
+):
+    """Flash attention with GQA/causal/sliding-window/softcap.
+
+    ``scale`` may be a traced scalar (the vmap sweep engine threads
+    alpha_attn through it): the kernel path folds it into q ahead of the
+    Pallas call, whose internal scale stays the compile-time constant 1.
+    """
+    requested = impl
+    impl = _resolve_impl(impl)
+    S, T = q.shape[1], k.shape[1]
+    bq, bk = min(block_q, S), min(block_k, T)
+    if impl != "ref" and (S % bq or T % bk):
+        _reject_untileable(
+            "attention", impl, requested,
+            f"S={S}, T={T} vs blocks ({bq}, {bk})",
+        )
+        impl = "ref"
+    return _attention_jit(
+        q, k, v, scale, causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, impl=impl,
+    )
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "impl"))
-def fused_rmsnorm(x, gain, *, eps: float = 1e-6, block_rows: int = 256,
-                  impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "ref"
+def _rmsnorm_jit(x, gain, *, eps, block_rows, impl):
     if impl == "ref":
         return ref.rmsnorm_ref(x, gain, eps)
     return rn.rmsnorm(
         x, gain, eps=eps, block_rows=block_rows,
         interpret=(impl == "interpret"),
+    )
+
+
+def fused_rmsnorm(x, gain, *, eps: float = 1e-6, block_rows: int = 256,
+                  impl: str = "auto"):
+    # rmsnorm pads rows internally — every shape tiles, no fallback needed
+    return _rmsnorm_jit(
+        x, gain, eps=eps, block_rows=block_rows, impl=_resolve_impl(impl)
+    )
+
+
+# ---------------------------------------------------------------------------
+# softmax cross entropy
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "block_v", "impl"))
+def _softmax_xent_jit(logits, labels, *, block_rows, block_v, impl):
+    if impl == "ref":
+        return ref.softmax_cross_entropy_ref(logits, labels)
+    return ce.cross_entropy(
+        logits, labels, block_rows=block_rows, block_v=block_v,
+        interpret=(impl == "interpret"),
+    )
+
+
+def softmax_cross_entropy(
+    logits, labels, *, block_rows: int = 256, block_v: int = 2048,
+    impl: str = "auto",
+):
+    """Per-position softmax CE, f32, shape ``logits.shape[:-1]``.
+
+    Negative (masked) labels are clamped; the caller applies its own mask to
+    the returned losses (masked rows then also get zero cotangent, so their
+    dlogits vanish).  The kernel path never materializes (B, S, V) log-probs
+    — an online logsumexp over vocab chunks (see kernels/cross_entropy.py).
+    """
+    requested = impl
+    impl = _resolve_impl(impl)
+    V = logits.shape[-1]
+    bv = min(block_v, V)
+    if impl != "ref" and V % bv:
+        _reject_untileable(
+            "softmax_cross_entropy", impl, requested,
+            f"V={V} vs vocab chunk {bv}",
+        )
+        impl = "ref"
+    return _softmax_xent_jit(
+        logits, labels, block_rows=block_rows, block_v=bv, impl=impl
     )

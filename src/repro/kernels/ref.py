@@ -48,3 +48,17 @@ def rmsnorm_ref(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
     y = x32 * jax.lax.rsqrt(var + eps) * (1.0 + gain.astype(jnp.float32))
     return y.astype(x.dtype)
+
+
+def softmax_cross_entropy_ref(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Per-position CE, f32: logsumexp(logits) - logits[label].
+
+    Negative (masked) labels are clamped to 0 — callers zero those positions
+    out themselves (the ops/model contract).  Deliberately materializes the
+    straight-line log-softmax math the chunked kernel avoids.
+    """
+    x = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(x, axis=-1)
+    safe = jnp.clip(labels, 0, logits.shape[-1] - 1)
+    picked = jnp.take_along_axis(x, safe[..., None], axis=-1)[..., 0]
+    return lse - picked

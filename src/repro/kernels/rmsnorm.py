@@ -1,8 +1,19 @@
-"""Fused RMSNorm Pallas kernel.
+"""Fused RMSNorm Pallas kernel — forward and backward.
 
 Row-tiled: each grid step normalizes a (block_rows, D) tile entirely in
 VMEM — one HBM read + one write per element instead of XLA's (potentially)
 multi-pass reduce + scale.  f32 accumulation regardless of input dtype.
+
+Backward (custom_vjp, recompute-based): nothing is stashed beyond (x, gain)
+— the rsqrt of the per-row mean square is one cheap reduce, so the backward
+kernel recomputes it instead of spending HBM on an (rows, 1) residual.  For
+``y = x * r * (1 + g)`` with ``r = rsqrt(mean(x^2) + eps)``:
+
+    dx    = r * (1 + g) * dy  -  x * r^3 / D * sum_j dy_j (1 + g_j) x_j
+    dgain = sum_rows dy * x * r
+
+dgain needs a cross-row reduction, accumulated in a VMEM f32 scratch across
+the (sequential) row-block grid and written once at the last block.
 """
 from __future__ import annotations
 
@@ -11,6 +22,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
@@ -19,6 +31,103 @@ def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
     var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
     y = x * jax.lax.rsqrt(var + eps) * (1.0 + g)
     o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _rmsnorm_bwd_kernel(
+    x_ref, g_ref, dy_ref, dx_ref, dg_ref, dg_acc_ref, *, eps: float, nb: int
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        dg_acc_ref[...] = jnp.zeros_like(dg_acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                  # (br, D)
+    g = g_ref[...].astype(jnp.float32)                  # (1, D)
+    dy = dy_ref[...].astype(jnp.float32)                # (br, D)
+    D = x.shape[-1]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    r = jax.lax.rsqrt(var + eps)                        # (br, 1)
+    w = 1.0 + g
+    dyw = dy * w
+    rowdot = jnp.sum(dyw * x, axis=-1, keepdims=True)   # (br, 1)
+    dx = r * dyw - x * (r * r * r / D) * rowdot
+    dx_ref[...] = dx.astype(dx_ref.dtype)
+    dg_acc_ref[...] += jnp.sum(dy * x * r, axis=0, keepdims=True)
+
+    @pl.when(i == nb - 1)
+    def _finalize():
+        dg_ref[...] = dg_acc_ref[...]
+
+
+def _pad_rows(x2, br):
+    rows = x2.shape[0]
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.concatenate(
+            [x2, jnp.zeros((pad, x2.shape[1]), x2.dtype)], axis=0
+        )
+    return x2
+
+
+def _fwd_call(x2, g2, *, eps, br, interpret):
+    n_blocks = x2.shape[0] // br
+    D = x2.shape[1]
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+        interpret=interpret,
+    )(x2, g2)
+
+
+def _bwd_call(x2, g2, dy2, *, eps, br, interpret):
+    n_blocks = x2.shape[0] // br
+    D = x2.shape[1]
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_bwd_kernel, eps=eps, nb=n_blocks),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(x2.shape, x2.dtype),
+            jax.ShapeDtypeStruct((1, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+        interpret=interpret,
+    )(x2, g2, dy2)
+
+
+@functools.lru_cache(maxsize=None)
+def _rmsnorm_fn(eps, br, interpret):
+    """Differentiable fused rmsnorm over pre-tiled 2-D operands."""
+
+    @jax.custom_vjp
+    def fn(x2, g2):
+        return _fwd_call(x2, g2, eps=eps, br=br, interpret=interpret)
+
+    def fwd(x2, g2):
+        return fn(x2, g2), (x2, g2)
+
+    def bwd(res, dy2):
+        x2, g2 = res
+        dx2, dg2 = _bwd_call(x2, g2, dy2, eps=eps, br=br, interpret=interpret)
+        return dx2, dg2.astype(g2.dtype)
+
+    fn.defvjp(fwd, bwd)
+    return fn
 
 
 def rmsnorm(
@@ -35,24 +144,12 @@ def rmsnorm(
         rows *= s
     x2 = x.reshape(rows, D)
     br = min(block_rows, rows)
-    # pad rows to a multiple of the block
-    pad = (-rows) % br
-    if pad:
-        x2 = jnp.concatenate([x2, jnp.zeros((pad, D), x2.dtype)], axis=0)
+    # pad rows to a multiple of the block (zero rows contribute nothing to
+    # dgain and their dx is discarded by the slice below)
+    x2 = _pad_rows(x2, br)
     g2 = gain.reshape(1, D)
-    n_blocks = x2.shape[0] // br
-
-    out = pl.pallas_call(
-        functools.partial(_rmsnorm_kernel, eps=eps),
-        grid=(n_blocks,),
-        in_specs=[
-            pl.BlockSpec((br, D), lambda i: (i, 0)),
-            pl.BlockSpec((1, D), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
-        interpret=interpret,
-    )(x2, g2)
-    if pad:
+    fn = _rmsnorm_fn(float(eps), br, bool(interpret))
+    out = fn(x2, g2)
+    if x2.shape[0] != rows:
         out = out[:rows]
     return out.reshape(orig_shape)

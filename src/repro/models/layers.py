@@ -161,11 +161,16 @@ def apply_w(
 
 
 def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
-    dt = x.dtype
-    x32 = x.astype(jnp.float32)
-    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
-    y = x32 * jax.lax.rsqrt(var + eps)
-    return (y * (1.0 + gain.astype(jnp.float32))).astype(dt)
+    """RMSNorm with the gemma ``(1 + gain)`` convention, f32 accumulation.
+
+    Routes through the kernels.ops dispatcher: the fused Pallas kernel
+    (forward + custom_vjp backward) on TPU, the numerically-identical jnp
+    reference elsewhere — so every rmsnorm in the model picks up the kernel
+    with no per-call-site opt-in.
+    """
+    from repro.kernels import ops as _ops  # local: layers is a leaf module
+
+    return _ops.fused_rmsnorm(x, gain, eps=eps)
 
 
 def layernorm(

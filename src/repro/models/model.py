@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.core.init import init_params
 from repro.core.meta import ParamMeta
+from repro.kernels import ops
 from repro.core.parametrization import AbcParametrization, Role, resolve
 from repro.distributed.sharding import shard
 from repro.models import attention as attn_lib
@@ -142,7 +143,9 @@ class Model:
         x = x + sinusoidal(x.shape[1], cfg.d_model, dt)[None]
         B, M = x.shape[:2]
         pos = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32)[None], (B, M))
-        ctx = tfm.Ctx(positions=pos, causal=False, mode="train")
+        ctx = tfm.Ctx(
+            positions=pos, causal=False, mode="train", aligned_positions=True
+        )
         enc_cfg = cfg.replace(
             pattern=("attn",), tail=(), n_layers=cfg.n_encoder_layers
         )
@@ -181,6 +184,7 @@ class Model:
         the batched sweep engine; None keeps the config's baked floats."""
         cfg = self.cfg
         B, S = tokens.shape
+        aligned = positions is None  # static: we construct 0..S-1 ourselves
         if positions is None:
             positions = jnp.broadcast_to(
                 jnp.arange(S, dtype=jnp.int32)[None], (B, S)
@@ -196,6 +200,7 @@ class Model:
         ctx = tfm.Ctx(
             positions=positions, causal=True, memory=memory,
             mode=mode, cache_len=cache_len, hp=hp,
+            aligned_positions=aligned,
         )
         x, new_cache = tfm.run_stack(
             cfg, params["groups"], self.meta["groups"],
@@ -207,16 +212,30 @@ class Model:
 
     # ------------------------------------------------------------------
     def loss_fn(self, params, batch, collect_acts: bool = False, hp=None):
-        """Next-token CE. batch: tokens (B,S), labels (B,S) (-100 = masked)."""
+        """Next-token CE. batch: tokens (B,S), labels (B,S) (-100 = masked).
+
+        The per-token CE routes through ops.softmax_cross_entropy — the
+        chunked Pallas kernel on TPU (online logsumexp over vocab chunks,
+        never materializing a (B, S, V) log-prob tensor or its autodiff
+        residual), the straight-line jnp reference elsewhere.  Masked rows
+        get zero weight here *and* zero cotangent, so their d-logits vanish
+        under either impl.
+        """
         logits, _ = self.forward(
             params, batch["tokens"], memory_inputs=batch, mode="train", hp=hp
         )
         labels = batch["labels"]
         mask = (labels >= 0).astype(jnp.float32)
-        safe = jnp.maximum(labels, 0)
-        logp = jax.nn.log_softmax(logits, axis=-1)
-        ll = jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
-        loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        if self.cfg.naive_loss:
+            # pre-kernel formulation, kept as a debug/benchmark baseline
+            # (benchmarks/perf_backward.py, perf_iterations "naive_ce")
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            losses = -jnp.take_along_axis(
+                logp, jnp.maximum(labels, 0)[..., None], axis=-1
+            )[..., 0]
+        else:
+            losses = ops.softmax_cross_entropy(logits, labels)
+        loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
         if collect_acts:
             return loss, {"logits": logits}
         return loss

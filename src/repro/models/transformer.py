@@ -24,6 +24,7 @@ from repro.core.infshape import InfDim, InfShape
 from repro.core.meta import ParamMeta
 from repro.core.parametrization import resolve
 from repro.distributed.sharding import shard
+from repro.kernels import ops as ops_lib
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import rglru as rglru_lib
@@ -53,6 +54,11 @@ class Ctx:
     cache_len: int = 0                   # target KV cache length (prefill/decode)
     hp: Optional[Any] = None             # RuntimeHP: traced per-candidate HPs
                                          # (None -> use the cfg's baked floats)
+    aligned_positions: bool = False      # positions are known to be
+                                         # 0..S-1 (set by the builder, a
+                                         # static fact about the trace) —
+                                         # required by the Pallas attention
+                                         # path, whose masking is iota-based
 
 
 def _alpha_attn(cfg, ctx: Ctx):
@@ -178,7 +184,20 @@ def _self_attention(
             )
         S = x.shape[1]
         acc = jnp.bfloat16 if cfg.attn_acc == "bfloat16" else jnp.float32
-        if S > cfg.attn_chunk:
+        if cfg.use_pallas and ctx.aligned_positions:
+            # Pallas flash attention (forward + custom_vjp backward kernels)
+            # via the ops dispatcher: pallas on TPU, jnp ref elsewhere.
+            # Gated on aligned_positions: the kernel masks by iota, which
+            # matches make_mask only when positions are 0..S-1 (callers
+            # passing custom positions fall through to the jnp paths).
+            # `scale` may be traced (sweep-engine alpha_attn); ops folds it
+            # into q.  NOTE: the kernel always accumulates in f32 —
+            # cfg.attn_acc="bfloat16" applies to the jnp paths below only.
+            out = ops_lib.attention(
+                q, k, v, scale=scale, causal=ctx.causal, window=window,
+                softcap=cfg.attn_softcap,
+            )
+        elif S > cfg.attn_chunk:
             # q-chunked: bounded-memory attention for long sequences
             out = attn_lib.attend_chunked(
                 q, k, v, ctx.positions, ctx.positions, scale,

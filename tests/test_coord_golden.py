@@ -1,0 +1,116 @@
+"""Golden coord-check regression fixtures.
+
+`tests/test_coord_check.py` asserts the *qualitative* muP claims (slopes).
+This module pins the *quantitative* activation-scale trajectories: a
+fixed-seed coord check for SP / muP-Table8 / u-muP at two widths is
+compared elementwise against committed snapshots, so any numerics drift in
+the kernel stack (a changed reduction order, a dropped multiplier, a
+backward-kernel bug that perturbs step-2 activations) fails loudly even
+when it is too small to flip a log-log slope.
+
+Regenerate after an *intentional* numerics change with:
+
+    PYTHONPATH=src python scripts/gen_coord_goldens.py
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.coord_check import coord_check
+from repro.core.parametrization import resolve
+from repro.data.pipeline import make_pipeline
+from repro.models.model import build_model
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "coord_check.json")
+
+PARAMETRIZATIONS = ("sp", "mup", "umup")
+WIDTHS = (1.0, 4.0)
+STEPS = 2
+LR = 1e-2
+# CI runs on different x86 microarchitectures than the machine that wrote
+# the fixtures; float32 reduction order differences stay well under this.
+RTOL = 5e-3
+ATOL = 1e-6
+
+
+def compute_records(p13n: str):
+    """records[width_key][t][act] for one parametrization (fixed seeds)."""
+    base = get_smoke_config("mup-gpt").replace(
+        dtype="float32", n_layers=2, zero_init_readout=False,
+        zero_init_query=False,
+    )
+
+    def make_model(width_i):
+        cfg = base.scaled(WIDTHS[width_i]).replace(parametrization=p13n)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+
+        def loss_fn(params, batch):
+            loss, acts = model.loss_fn(params, batch, collect_acts=True)
+            # one per-layer input-side probe alongside the output logits
+            acts = dict(acts, embed=model._embed(params, batch["tokens"]))
+            return loss, acts
+
+        return params, model.meta, loss_fn
+
+    pipe = make_pipeline(256, 32, 8, seed=0)
+    batches = [
+        {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+        for t in range(STEPS)
+    ]
+    res = coord_check(
+        make_model,
+        widths=list(range(len(WIDTHS))),
+        batches=batches,
+        parametrization=resolve(p13n),
+        optimizer="adam",
+        lr=LR,
+    )
+    return {
+        str(int(64 * WIDTHS[i])): [
+            {k: float(v) for k, v in step.items()} for step in recs
+        ]
+        for i, recs in res.records.items()
+    }
+
+
+@pytest.fixture(scope="module")
+def golden():
+    assert os.path.exists(GOLDEN_PATH), (
+        f"missing fixture {GOLDEN_PATH}; run "
+        "`PYTHONPATH=src python scripts/gen_coord_goldens.py`"
+    )
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("p13n", PARAMETRIZATIONS)
+def test_coord_check_matches_golden(p13n, golden):
+    assert p13n in golden, f"no golden records for {p13n}; regenerate"
+    got = compute_records(p13n)
+    want = golden[p13n]
+    assert sorted(got) == sorted(want)
+    for width in want:
+        assert len(got[width]) == len(want[width])
+        for t, (gstep, wstep) in enumerate(zip(got[width], want[width])):
+            assert sorted(gstep) == sorted(wstep), (p13n, width, t)
+            for act, wval in wstep.items():
+                np.testing.assert_allclose(
+                    gstep[act], wval, rtol=RTOL, atol=ATOL,
+                    err_msg=f"{p13n} width={width} step={t} act={act}",
+                )
+
+
+def test_golden_metadata_matches():
+    """The fixture was generated with the constants this test uses."""
+    with open(GOLDEN_PATH) as f:
+        meta = json.load(f)["__meta__"]
+    assert meta["widths"] == list(WIDTHS)
+    assert meta["steps"] == STEPS
+    assert meta["lr"] == LR
+    assert sorted(meta["parametrizations"]) == sorted(PARAMETRIZATIONS)

@@ -6,6 +6,10 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+pytestmark = pytest.mark.slow  # spawns an 8-fake-device lowering subprocess
+
 SCRIPT = textwrap.dedent(
     """
     import os

@@ -1,13 +1,21 @@
 """Pallas kernels vs pure-jnp oracles (interpret=True on CPU), with
-shape/dtype sweeps and hypothesis property tests."""
+shape/dtype sweeps and hypothesis property tests (the latter ride along
+only when hypothesis is installed — the parametrized sweeps run
+everywhere).  Gradient-level differential tests live in
+tests/test_kernel_grads.py."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
 
@@ -51,29 +59,31 @@ def test_flash_attention_matches_oracle(case, dtype):
     )
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    B=st.integers(1, 2),
-    nq=st.integers(1, 3),
-    K=st.sampled_from([1, 2, 4]),
-    G=st.sampled_from([1, 2]),
-    d=st.sampled_from([16, 32, 64]),
-    window=st.sampled_from([0, 48]),
-    softcap=st.sampled_from([0.0, 20.0]),
-    seed=st.integers(0, 5),
-)
-def test_flash_attention_property(B, nq, K, G, d, window, softcap, seed):
-    S = 64 * nq
-    H = K * G
-    q, k, v = _qkv(B, S, S, H, K, d, jnp.float32, seed)
-    out = ops.attention(
-        q, k, v, scale=1.0 / d, causal=True, window=window, softcap=softcap,
-        block_q=64, block_k=64, impl="interpret",
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        B=st.integers(1, 2),
+        nq=st.integers(1, 3),
+        K=st.sampled_from([1, 2, 4]),
+        G=st.sampled_from([1, 2]),
+        d=st.sampled_from([16, 32, 64]),
+        window=st.sampled_from([0, 48]),
+        softcap=st.sampled_from([0.0, 20.0]),
+        seed=st.integers(0, 5),
     )
-    want = ref.attention_ref(
-        q, k, v, scale=1.0 / d, causal=True, window=window, softcap=softcap
-    )
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+    def test_flash_attention_property(B, nq, K, G, d, window, softcap, seed):
+        S = 64 * nq
+        H = K * G
+        q, k, v = _qkv(B, S, S, H, K, d, jnp.float32, seed)
+        out = ops.attention(
+            q, k, v, scale=1.0 / d, causal=True, window=window,
+            softcap=softcap, block_q=64, block_k=64, impl="interpret",
+        )
+        want = ref.attention_ref(
+            q, k, v, scale=1.0 / d, causal=True, window=window, softcap=softcap
+        )
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
 
 
 def test_attention_is_convex_combination():
@@ -100,19 +110,83 @@ def test_rmsnorm_matches_oracle(rows, D, block, dtype):
     )
 
 
-@settings(max_examples=10, deadline=None)
-@given(
-    rows=st.integers(1, 70),
-    D=st.sampled_from([32, 128, 384]),
-    scale=st.floats(0.5, 100.0),  # below ~0.5 the eps term visibly breaks
-)                                  # exact invariance (eps/(c^2 var) term)
-def test_rmsnorm_scale_invariance(rows, D, scale):
-    """RMSNorm(c*x) ~= RMSNorm(x) for c > 0 — the kernel must preserve it."""
-    x = jax.random.normal(jax.random.PRNGKey(2), (rows, D))
-    g = jnp.zeros((D,))
-    a = ops.fused_rmsnorm(x, g, impl="interpret", block_rows=16)
-    b = ops.fused_rmsnorm(x * scale, g, impl="interpret", block_rows=16)
-    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        rows=st.integers(1, 70),
+        D=st.sampled_from([32, 128, 384]),
+        scale=st.floats(0.5, 100.0),  # below ~0.5 the eps term visibly
+    )                                  # breaks exact invariance
+    def test_rmsnorm_scale_invariance(rows, D, scale):
+        """RMSNorm(c*x) ~= RMSNorm(x) for c > 0 — the kernel must preserve
+        it."""
+        x = jax.random.normal(jax.random.PRNGKey(2), (rows, D))
+        g = jnp.zeros((D,))
+        a = ops.fused_rmsnorm(x, g, impl="interpret", block_rows=16)
+        b = ops.fused_rmsnorm(x * scale, g, impl="interpret", block_rows=16)
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3
+        )
+
+
+@pytest.mark.parametrize("impl", ["pallas", "interpret"])
+def test_attention_explicit_impl_never_silently_falls_back(impl):
+    """Regression: non-tileable shapes used to silently run the jnp
+    reference even when impl="pallas"/"interpret" was requested — so a
+    broken kernel could pass tests against the oracle it was meant to be
+    checked against.  Explicit impls must raise instead."""
+    q, k, v = _qkv(1, 100, 100, 4, 2, 32, jnp.float32)  # 100 % 64 != 0
+    with pytest.raises(ValueError, match="refusing to silently fall back"):
+        ops.attention(
+            q, k, v, scale=0.1, causal=True, block_q=64, block_k=64, impl=impl
+        )
+
+
+def test_attention_auto_falls_back_on_untileable():
+    """auto keeps the best-effort contract: correct answer via ref."""
+    q, k, v = _qkv(1, 100, 100, 4, 2, 32, jnp.float32)
+    out = ops.attention(q, k, v, scale=0.1, causal=True, impl="auto")
+    want = ref.attention_ref(q, k, v, scale=0.1, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+def test_cross_entropy_explicit_impl_never_silently_falls_back():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 100))  # 100 % 64 != 0
+    with pytest.raises(ValueError, match="refusing to silently fall back"):
+        ops.softmax_cross_entropy(
+            x, jnp.zeros((8,), jnp.int32), block_v=64, impl="interpret"
+        )
+
+
+def test_bad_impl_rejected():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 64))
+    with pytest.raises(ValueError, match="impl must be one of"):
+        ops.fused_rmsnorm(x, jnp.zeros((64,)), impl="cuda")
+
+
+CE_SWEEP = [
+    # N, V, block_rows, block_v
+    (64, 1024, 16, 128),
+    (37, 512, 8, 512),       # padded rows, single vocab chunk
+    (128, 32768, 64, 2048),  # GPT-class vocab
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("case", CE_SWEEP)
+def test_cross_entropy_matches_oracle(case, dtype):
+    N, V, br, bv = case
+    x = (jax.random.normal(jax.random.PRNGKey(0), (N, V)) * 3).astype(dtype)
+    lab = jax.random.randint(jax.random.PRNGKey(1), (N,), 0, V)
+    out = ops.softmax_cross_entropy(
+        x, lab, impl="interpret", block_rows=br, block_v=bv
+    )
+    want = ref.softmax_cross_entropy_ref(x, lab)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want),
+        atol={jnp.float32: 1e-4, jnp.bfloat16: 5e-2}[dtype], rtol=1e-3,
+    )
 
 
 def test_model_path_equals_kernel_path():

@@ -9,6 +9,8 @@ from repro.configs import get_config, get_smoke_config, list_archs
 from repro.models.model import build_model
 from repro.optim.optimizer import Optimizer, apply_updates
 
+pytestmark = pytest.mark.slow  # minutes-scale: every arch, fwd + train step
+
 ARCHS = [a for a in list_archs()]
 
 

@@ -11,6 +11,7 @@ from repro.launch.train import SimulatedFailure, train_loop
 from repro.launch.serve import generate
 from repro.models.model import build_model
 
+pytestmark = pytest.mark.slow  # minutes-scale end-to-end tier
 
 HPS = HParams(lr=3e-2, sigma=0.5)
 
