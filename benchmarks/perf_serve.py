@@ -1,0 +1,120 @@
+"""Serving throughput: dense per-token-loop driver vs the jitted engine.
+
+Both drivers serve the *identical* workload — R full-length prompts, GEN
+greedy tokens each, no EOS — and both timings are end-to-end (prefill +
+first-token sampling + every decode step), so the reported ratio compares
+like with like:
+
+  - **dense loop** (launch/serve.py ``generate`` semantics): one jitted
+    decode_step per token, host dispatch every step.  Per-decode-step
+    latencies are additionally measured around each step -> p50/p95.
+  - **engine** (serving/engine.py): whole serve inside one jit.  Per-token
+    latency is total wall time / tokens (the loop never surfaces to the
+    host); best of 3 runs.
+
+Reported CSV (benchmarks/run.py format):
+    perf_serve.dense,<us_per_token>,tok_s=..;p50_ms=..;p95_ms=..  (decode-step p50/p95)
+    perf_serve.engine,<us_per_token>,tok_s=..;speedup=..x
+
+The ISSUE-5 acceptance bar is engine >= 2x the dense per-token-loop driver
+on this config.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import report
+from repro.configs import get_smoke_config
+from repro.models.model import build_model
+from repro.serving.engine import Engine, EngineConfig
+
+R, PMAX, GEN, SLOTS = 8, 32, 32, 4
+
+
+def _setup():
+    cfg = get_smoke_config("smollm-135m").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # full-length prompts: the dense driver cannot serve ragged requests,
+    # so the shared workload is the one both drivers can run identically
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (R, PMAX), 0, cfg.vocab_size
+    )
+    return cfg, model, params, prompts
+
+
+def _dense_serve(model, params, prompts):
+    """The pre-engine driver, end to end: batched prefill + first-token
+    sampling + one jitted decode_step per remaining token.  Returns
+    (total_s incl prefill, per-decode-step seconds) for GEN tokens/request.
+    """
+    B, P = prompts.shape
+    prefill = jax.jit(lambda pr, t: model.prefill(pr, t, cache_len=P + GEN))
+    decode = jax.jit(model.decode_step)
+    # warm both compiles outside the timed region (the engine's warmup
+    # serve is likewise untimed)
+    last, cache = prefill(params, prompts)
+    tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+    decode(params, tok, jnp.full((B, 1), P, jnp.int32), cache)[0].block_until_ready()
+
+    steps = []
+    t_all = time.perf_counter()
+    last, cache = prefill(params, prompts)
+    tok = jnp.argmax(last, -1).astype(jnp.int32)[:, None]
+    tok.block_until_ready()
+    for i in range(GEN - 1):
+        t0 = time.perf_counter()
+        pos = jnp.full((B, 1), P + i, jnp.int32)
+        logits, cache = decode(params, tok, pos, cache)
+        tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)[:, None]
+        tok.block_until_ready()
+        steps.append(time.perf_counter() - t0)
+    return time.perf_counter() - t_all, steps
+
+
+def run():
+    cfg, model, params, prompts = _setup()
+    lens = jnp.full((R,), PMAX, jnp.int32)
+    n_tok = R * GEN                  # identical for both drivers (no EOS)
+
+    # dense loop serves R requests as ceil(R / SLOTS) fixed batches
+    dense_total, dense_steps = 0.0, []
+    for lo in range(0, R, SLOTS):
+        t, s = _dense_serve(model, params, prompts[lo:lo + SLOTS])
+        dense_total += t
+        dense_steps += s
+    dense_us = dense_total / n_tok * 1e6
+    p50, p95 = np.percentile(np.array(dense_steps) * 1e3, [50, 95])
+    report(
+        "perf_serve.dense", dense_us,
+        f"tok_s={n_tok / dense_total:.1f};p50_ms={p50:.2f};p95_ms={p95:.2f}",
+    )
+
+    engine = Engine(model, EngineConfig(
+        n_slots=SLOTS, page_size=16, max_prompt_len=PMAX, max_gen_len=GEN,
+    ))
+    out = engine.serve(params, prompts, lens)            # warmup compile
+    jax.block_until_ready(out["tokens"])
+    assert int(out["lengths"].sum()) == n_tok
+    times = []
+    for i in range(3):
+        t0 = time.perf_counter()
+        out = engine.serve(params, prompts, lens, seed=i)
+        jax.block_until_ready(out["tokens"])
+        times.append(time.perf_counter() - t0)
+    eng_total = min(times)
+    eng_us = eng_total / n_tok * 1e6
+    speedup = dense_us / eng_us
+    report(
+        "perf_serve.engine", eng_us,
+        f"tok_s={n_tok / eng_total:.1f};speedup={speedup:.2f}x",
+    )
+    assert engine.compile_count() == 1, "engine recompiled across serves"
+
+
+if __name__ == "__main__":
+    run()

@@ -21,6 +21,7 @@ def main() -> None:
         fig4_hp_stability,
         fig5_coord_check,
         fig7_wider_is_better,
+        perf_serve,
         perf_sweep,
         roofline,
         table4_mutransfer_vs_direct,
@@ -34,6 +35,7 @@ def main() -> None:
         "fig7": fig7_wider_is_better,
         "table4": table4_mutransfer_vs_direct,
         "perf_sweep": perf_sweep,
+        "perf_serve": perf_serve,
         "roofline": roofline,
     }
     failures = 0

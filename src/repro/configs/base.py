@@ -114,6 +114,11 @@ class ModelConfig:
     zero_init_query: bool = True      # App. D.2
     tie_embeddings: bool = True
 
+    # ---- generation / serving ----------------------------------------------
+    eos_token_id: int = -1            # stop token for generation; -1 disables
+                                      # (stub tokenizer frontends have no
+                                      # reserved id, so opt-in per config/CLI)
+
     # ---- misc architecture -------------------------------------------------
     act: str = "gelu_glu"             # "gelu" | "relu" | "gelu_glu" | "silu_glu"
     norm_eps: float = 1e-6

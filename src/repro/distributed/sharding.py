@@ -161,6 +161,10 @@ def make_rules(
             "w_fsdp": dp_all if fsdp else None,
             "layers": None, "ssm_state": None, "conv_width": None,
             "image": None, "frames": None,
+            # serving: decode slots ride the full DP axis; page pools are
+            # sharded over kv_heads/head_dim only (pages replicate so any
+            # slot can own any page)
+            "slots": dp_all, "pages": None,
         }
         return ShardingRules(rules=rules)
 
@@ -217,5 +221,11 @@ def make_rules(
         "conv_width": None,
         "image": None,
         "frames": None,
+        # serving: the decode-batch (slot) axis maps like batch — slots are
+        # the unit of data parallelism at decode time; the paged block pool
+        # replicates its page axis (any slot may own any page) and shards
+        # its kv_heads/head_dim dims through the existing kv rules.
+        "slots": batch_axes,
+        "pages": None,
     }
     return ShardingRules(rules=rules)

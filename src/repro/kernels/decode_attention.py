@@ -1,0 +1,165 @@
+"""Flash-decode Pallas TPU kernel: single-query attention over a paged KV cache.
+
+The serving engine's decode step is one query token per slot attending over
+that slot's pages of the shared block pool.  The kernel never materializes a
+contiguous per-slot KV view — pages are fetched straight from the pool via a
+*scalar-prefetched page table* (pltpu.PrefetchScalarGridSpec): the BlockSpec
+index map for the K/V/pos pools reads ``table[b, j]`` to pick the physical
+page for logical page j of slot b, so the gather happens in the DMA engine,
+not as an HBM->HBM copy.
+
+Design (TPU-native, mirrors kernels/flash_attention.py):
+  - grid (B, K, C): slots x kv-heads x logical pages.  The last grid dim is
+    iterated sequentially on TPU, so the per-page online-softmax running
+    state (m, l, acc) lives in VMEM scratch across it — this *is* the
+    split-KV loop of flash-decode, with grid-sequential accumulation
+    replacing the CUDA two-pass reduce.
+  - GQA in-kernel: q is laid out (B, K, G, d); each program handles all G
+    query heads of one kv head, so the MXU sees a (G x d) @ (d x P) matmul
+    and K/V pages are fetched once per group, not once per query head.
+  - page-level skipping: pages beyond the slot's live page count
+    (q_pos // P, ring-clamped for windowed layers) are never computed
+    (pl.when); masking *within* a live page is by the stored per-token
+    positions, so ring-buffer wraparound and half-filled pages need no
+    special cases.
+  - sliding window + gemma2 softcap folded in as compile-time constants.
+  - fully-masked rows (inactive slots, q_pos = -1) produce exact zeros: the
+    running denominator stays 0 and the finalize divide is guarded.
+
+Validated against kernels/ref.py::decode_attention_ref in interpret mode
+(tests/test_decode_attention.py: GQA/MQA x window x softcap sweep).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ref import NEG_INF
+
+
+def _decode_kernel(
+    tab_ref,      # scalar-prefetch: (B, C) int32 page table
+    qpos_ref,     # scalar-prefetch: (B,) int32 query positions (-1 inactive)
+    q_ref,        # (1, 1, G, d)
+    k_ref,        # (1, P, 1, d) — page picked by the index map via tab_ref
+    v_ref,        # (1, P, 1, d)
+    pos_ref,      # (1, P) int32 stored token positions of the page
+    o_ref,        # (1, 1, G, d)
+    acc_ref, m_ref, l_ref,
+    *, scale: float, window: int, softcap: float,
+    page: int, n_pages_per_slot: int,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    qp = qpos_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # live logical pages: the slot has written pages 0..qp//page; windowed
+    # layers clamp to the ring length (every ring slot live once warm).
+    n_live = jnp.minimum(n_pages_per_slot, qp // page + 1)
+    needed = jnp.logical_and(qp >= 0, j < n_live)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)          # (G, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (P, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # (P, d)
+        pos = pos_ref[0, :]                                # (P,)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.logical_and(pos >= 0, pos <= qp)
+        if window:
+            mask = jnp.logical_and(mask, (qp - pos) < window)
+        s = jnp.where(mask[None, :], s, NEG_INF)
+
+        m_prev = m_ref[...]                                 # (G, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        # explicit where: when every entry is masked m_new stays NEG_INF and
+        # exp(s - m_new) would be exp(0) = 1 — the mask keeps p at exact 0.
+        p = jnp.where(mask[None, :], jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages_per_slot - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jax.Array,            # (B, H, d) — one query per slot
+    k_pages: jax.Array,      # (N, P, K, d) paged pool
+    v_pages: jax.Array,      # (N, P, K, d)
+    pos_pages: jax.Array,    # (N, P) int32; -1 = empty
+    page_table: jax.Array,   # (B, C) int32 page ids
+    q_pos: jax.Array,        # (B,) int32; -1 = inactive slot -> zeros out
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged single-query flash attention; returns (B, H, d).
+
+    Inference-only (no custom_vjp — nothing backprops through serving).
+    Use kernels.ops.decode_attention for the dispatching wrapper.
+    """
+    B, H, d = q.shape
+    N, P, K, _ = k_pages.shape
+    C = page_table.shape[1]
+    assert H % K == 0, (H, K)
+    G = H // K
+    qg = q.reshape(B, K, G, d)
+    tab = jnp.clip(page_table, 0, N - 1).astype(jnp.int32)
+    qp = q_pos.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _decode_kernel,
+        scale=scale, window=window, softcap=softcap,
+        page=P, n_pages_per_slot=C,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, C),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0)),
+            pl.BlockSpec(
+                (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
+            ),
+            pl.BlockSpec(
+                (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
+            ),
+            pl.BlockSpec((1, P), lambda b, kh, j, tab, qp: (tab[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G, d), jnp.float32),   # acc
+            pltpu.VMEM((G, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((G, 1), jnp.float32),   # l (running denom)
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, d), q.dtype),
+        interpret=interpret,
+    )(tab, qp, qg, k_pages, v_pages, pos_pages)
+    return out.reshape(B, H, d)

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import cross_entropy as ce
+from repro.kernels import decode_attention as da
 from repro.kernels import flash_attention as fa
 from repro.kernels import ref
 from repro.kernels import rmsnorm as rn
@@ -125,6 +126,46 @@ def attention(
     return _attention_jit(
         q, k, v, scale, causal=causal, window=window, softcap=softcap,
         block_q=bq, block_k=bk, impl=impl,
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode attention (paged, single query)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "impl"))
+def _decode_attention_jit(
+    q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
+    *, window, softcap, impl,
+):
+    if impl == "ref":
+        return ref.decode_attention_ref(
+            q, k_pages, v_pages, pos_pages, page_table, q_pos,
+            scale=scale, window=window, softcap=softcap,
+        )
+    # fold the (possibly traced) scale into q, as ops.attention does — the
+    # kernel's internal scale stays the compile-time constant 1.
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    return da.flash_decode(
+        qs, k_pages, v_pages, pos_pages, page_table, q_pos,
+        scale=1.0, window=window, softcap=softcap,
+        interpret=(impl == "interpret"),
+    )
+
+
+def decode_attention(
+    q, k_pages, v_pages, pos_pages, page_table, q_pos, *, scale,
+    window: int = 0, softcap: float = 0.0, impl: str = "auto",
+):
+    """Flash-decode: single-query attention over a paged KV cache.
+
+    ``q`` (B, H, d), pools (N, P, K, d) + (N, P) stored positions,
+    ``page_table`` (B, C), ``q_pos`` (B,) (-1 = inactive slot -> zeros).
+    Pages are whole-block fetches — every shape tiles, no fallback needed.
+    """
+    return _decode_attention_jit(
+        q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
+        window=window, softcap=softcap, impl=_resolve_impl(impl),
     )
 
 

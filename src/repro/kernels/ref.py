@@ -43,6 +43,50 @@ def attention_ref(
     return out.reshape(B, S, H, d).astype(q.dtype)
 
 
+def decode_attention_ref(
+    q: jax.Array,            # (B, H, d) — one query per decode slot
+    k_pages: jax.Array,      # (N, P, K, d) — paged KV pool
+    v_pages: jax.Array,      # (N, P, K, d)
+    pos_pages: jax.Array,    # (N, P) int32 token positions; -1 = empty
+    page_table: jax.Array,   # (B, C) int32 page ids per slot
+    q_pos: jax.Array,        # (B,) int32 query positions; -1 = inactive slot
+    *,
+    scale,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Single-query attention over a paged KV cache (the flash-decode oracle).
+
+    Gathers each slot's pages into a contiguous (C*P) band and masks by the
+    *stored* token positions: an entry is visible iff pos >= 0, pos <= q_pos
+    and (windowed) q_pos - pos < window.  Fully-masked rows (inactive slots,
+    q_pos = -1) return exact zeros — same contract as the Pallas kernel,
+    whose running denominator stays 0 for such rows.
+    """
+    B, H, d = q.shape
+    N, P, K, _ = k_pages.shape
+    C = page_table.shape[1]
+    G = H // K
+    tab = jnp.clip(page_table, 0, N - 1)
+    k = k_pages[tab].reshape(B, C * P, K, d).astype(jnp.float32)
+    v = v_pages[tab].reshape(B, C * P, K, d).astype(jnp.float32)
+    pos = pos_pages[tab].reshape(B, C * P)
+    mask = (pos >= 0) & (pos <= q_pos[:, None])
+    if window:
+        mask &= (q_pos[:, None] - pos) < window
+    qg = q.reshape(B, K, G, d).astype(jnp.float32)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qg, k) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    # all-masked rows: NEG_INF is finite so softmax is uniform, not NaN —
+    # zero it so inactive slots contribute exact 0s (kernel contract)
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v)
+    return out.reshape(B, H, d).astype(q.dtype)
+
+
 def rmsnorm_ref(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)

@@ -1,12 +1,20 @@
-"""Batched serving driver: prefill a batch of prompts, then decode N tokens.
+"""Serving driver: continuous-batching engine CLI + dense-loop oracle.
 
-Demonstrates the inference path end-to-end on real devices (CPU here, same
-code on the production mesh), with greedy/temperature sampling and
-per-sequence positions.
+Two paths share this entry point:
+
+- **engine** (default): the fully-jitted continuous-batching engine
+  (serving/engine.py) — paged KV cache, slot scheduler, flash-decode
+  kernel, zero per-token Python dispatch.
+- **dense** (``--dense``, and the automatic fallback for architectures the
+  paged engine cannot serve yet — recurrent/SSD/cross-attention caches):
+  the original host-side loop over a dense per-request cache, one jitted
+  ``decode_step`` per token.  It doubles as the correctness oracle the
+  engine is differential-tested against (tests/test_serving.py).
 
 Usage:
     python -m repro.launch.serve --arch smollm-135m --smoke \
-        --batch 4 --prompt-len 32 --gen-len 16
+        --requests 8 --prompt-len 32 --gen-len 16 --slots 4
+    python -m repro.launch.serve --arch gemma2-2b --smoke --dense
 """
 from __future__ import annotations
 
@@ -15,20 +23,31 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.distributed.sharding import make_rules, shardings as sharding_ctx
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import build_model
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.kv_cache import SERVABLE_KINDS, pool_bytes
 
 
 def generate(
     model, params, prompts: jax.Array, gen_len: int,
     memory_inputs=None, temperature: float = 0.0, seed: int = 0,
+    eos_token_id=None,
 ):
-    """prompts (B, P) -> generated tokens (B, gen_len)."""
+    """Dense-loop reference: prompts (B, P) -> generated tokens (B, gen_len).
+
+    One jitted ``decode_step`` per token (the dispatch overhead the engine
+    exists to remove).  Stops early once every row has emitted the stop
+    token (``eos_token_id``, default the config's knob; -1 disables); rows
+    that finish first are padded with the stop token.
+    """
     B, P = prompts.shape
     cache_len = P + gen_len
+    eos = model.cfg.eos_token_id if eos_token_id is None else int(eos_token_id)
     last_logits, cache = model.prefill(
         params, prompts, memory_inputs=memory_inputs, cache_len=cache_len
     )
@@ -40,27 +59,85 @@ def generate(
 
     decode = jax.jit(model.decode_step)
 
+    # thread keys: the root key is only ever split, never consumed — the
+    # first sampled token previously reused `key` that the loop then split
+    # again, correlating step 0 with step 1.
     key = jax.random.PRNGKey(seed)
-    tok = sample(last_logits, key)[:, None]                    # (B,1)
+    key, sub = jax.random.split(key)
+    tok = sample(last_logits, sub)[:, None]                    # (B,1)
+    done = (tok[:, 0] == eos) if eos >= 0 else jnp.zeros((B,), bool)
     out = [tok]
     for i in range(gen_len - 1):
+        if eos >= 0 and bool(jnp.all(done)):
+            break
         pos = jnp.full((B, 1), P + i, jnp.int32)
         logits, cache = decode(params, tok, pos, cache)
         key, sub = jax.random.split(key)
         tok = sample(logits[:, 0], sub)[:, None]
+        if eos >= 0:
+            tok = jnp.where(done[:, None], eos, tok)
+            done = done | (tok[:, 0] == eos)
         out.append(tok)
-    return jnp.concatenate(out, axis=1)
+    toks = jnp.concatenate(out, axis=1)
+    if toks.shape[1] < gen_len:  # early stop: pad with the stop token
+        pad = jnp.full((B, gen_len - toks.shape[1]), eos, jnp.int32)
+        toks = jnp.concatenate([toks, pad], axis=1)
+    return toks
+
+
+def _servable(cfg) -> bool:
+    return all(k in SERVABLE_KINDS for k in (*cfg.pattern, *cfg.tail))
+
+
+def _count_generated(toks, eos: int) -> int:
+    """Real generated tokens in a dense ``generate`` output: everything up
+    to and including each row's first stop token — the EOS padding after an
+    early stop is not generation (the engine's ``lengths`` counts the same
+    way, so the two drivers' tok/s are comparable)."""
+    toks = np.asarray(toks)
+    if eos < 0:
+        return toks.size
+    hit = toks == eos
+    first = np.where(hit.any(axis=1), hit.argmax(axis=1) + 1, toks.shape[1])
+    return int(first.sum())
+
+
+def _memory_inputs(cfg, batch: int):
+    mem = {}
+    if cfg.n_image_tokens:
+        mem["images"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (batch, cfg.n_image_tokens, cfg.frontend_feat_dim),
+        )
+    if cfg.family == "encdec":
+        mem["frames"] = jax.random.normal(
+            jax.random.PRNGKey(2),
+            (batch, cfg.encoder_seq, cfg.frontend_feat_dim),
+        )
+    return mem or None
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="stop token id (default: config's eos_token_id)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dense", action="store_true",
+                    help="force the dense per-token-loop driver")
+    ap.add_argument("--mixed-lens", action="store_true",
+                    help="random per-request prompt lengths (engine only: "
+                         "the dense driver always pads to --prompt-len, so "
+                         "its tok/s would not be comparable)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -69,34 +146,67 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(args.seed))
 
     mesh = make_host_mesh()
-    rules = make_rules(mesh, cfg=cfg, fsdp=False)
+    rules = make_rules(mesh, cfg=cfg, fsdp=False, kind="decode")
+    R, P = args.requests, args.prompt_len
     prompts = jax.random.randint(
-        jax.random.PRNGKey(args.seed + 1),
-        (args.batch, args.prompt_len), 0, cfg.vocab_size,
+        jax.random.PRNGKey(args.seed + 1), (R, P), 0, cfg.vocab_size
     )
-    mem = {}
-    if cfg.n_image_tokens:
-        mem["images"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.n_image_tokens, cfg.frontend_feat_dim),
-        )
-    if cfg.family == "encdec":
-        mem["frames"] = jax.random.normal(
-            jax.random.PRNGKey(2),
-            (args.batch, cfg.encoder_seq, cfg.frontend_feat_dim),
-        )
+
+    use_engine = not args.dense and _servable(cfg)
+    if not args.dense and not use_engine:
+        print(f"[serve] {cfg.name}: pattern {cfg.pattern} not paged-servable "
+              f"yet; falling back to the dense-loop driver")
+    # default workload: every prompt at full width, so engine and --dense
+    # runs of the same CLI serve the *same* requests and their printed
+    # tok/s are directly comparable
+    lens = jnp.full((R,), P, jnp.int32)
+    if args.mixed_lens:
+        if not use_engine:
+            print("[serve] --mixed-lens ignored: the dense driver pads all "
+                  "prompts to --prompt-len")
+        else:
+            lens = jax.random.randint(
+                jax.random.PRNGKey(args.seed + 2), (R,), max(1, P // 4), P + 1
+            )
 
     t0 = time.time()
     with sharding_ctx(mesh, rules):
-        toks = generate(
-            model, params, prompts, args.gen_len,
-            memory_inputs=mem or None, temperature=args.temperature,
-            seed=args.seed,
-        )
+        if use_engine:
+            engine = Engine(model, EngineConfig(
+                n_slots=args.slots, page_size=args.page_size,
+                max_prompt_len=P, max_gen_len=args.gen_len,
+                eos_token_id=args.eos,
+            ))
+            print(f"[serve] paged KV pools: {pool_bytes(cfg, engine.spec)/2**20:.1f} MiB "
+                  f"({engine.spec.n_slots} slots x {engine.spec.gp_cols} global"
+                  + (f" + {engine.spec.wp_cols} ring" if engine.spec.wp_cols else "")
+                  + f" pages of {engine.spec.page_size} tokens)")
+            out = engine.serve(
+                params, prompts, lens,
+                temperature=jnp.full((R,), args.temperature),
+                top_k=jnp.full((R,), args.top_k, jnp.int32),
+                top_p=jnp.full((R,), args.top_p),
+                seed=args.seed,
+            )
+            toks, n_tok = out["tokens"], int(out["lengths"].sum())
+            jax.block_until_ready(toks)
+        else:
+            if args.top_k or args.top_p < 1.0:
+                print("[serve] --top-k/--top-p ignored: the dense driver "
+                      "samples with temperature only")
+            toks = generate(
+                model, params, prompts, args.gen_len,
+                memory_inputs=_memory_inputs(cfg, R),
+                temperature=args.temperature, seed=args.seed,
+                eos_token_id=args.eos,
+            )
+            jax.block_until_ready(toks)
+            eos = cfg.eos_token_id if args.eos is None else args.eos
+            n_tok = _count_generated(toks, eos)
     dt = time.time() - t0
-    n_tok = args.batch * args.gen_len
-    print(f"[serve] generated {toks.shape} in {dt:.2f}s "
-          f"({n_tok/dt:.1f} tok/s)")
+    mode = "engine" if use_engine else "dense"
+    print(f"[serve:{mode}] generated {toks.shape} ({n_tok} tokens) "
+          f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
     print(toks[:, :16])
     return toks
 

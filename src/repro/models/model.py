@@ -178,10 +178,17 @@ class Model:
         cache: Optional[Dict] = None,
         cache_len: int = 0,
         hp=None,
+        paged=None,
+        full_cache: bool = False,
     ) -> Tuple[jax.Array, Optional[Dict]]:
         """``hp`` (a core.hp.RuntimeHP or None) supplies *traced* per-call
         forward multipliers (alpha_embed/alpha_attn/alpha_output) — used by
-        the batched sweep engine; None keeps the config's baked floats."""
+        the batched sweep engine; None keeps the config's baked floats.
+
+        ``paged`` (a serving.kv_cache.PagedState or None) switches decode
+        onto the paged block pool + flash-decode kernel; ``full_cache``
+        makes prefill emit full-length identity-ordered caches for the
+        engine's page scatter (see serving/kv_cache.py)."""
         cfg = self.cfg
         B, S = tokens.shape
         aligned = positions is None  # static: we construct 0..S-1 ourselves
@@ -201,6 +208,7 @@ class Model:
             positions=positions, causal=True, memory=memory,
             mode=mode, cache_len=cache_len, hp=hp,
             aligned_positions=aligned,
+            paged=paged, full_prefill_cache=full_cache,
         )
         x, new_cache = tfm.run_stack(
             cfg, params["groups"], self.meta["groups"],

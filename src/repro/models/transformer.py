@@ -38,6 +38,7 @@ from repro.models.layers import (
     wmeta,
 )
 from repro.models.rope import apply_rope
+from repro.serving import kv_cache as paged_kv
 
 ATTN_KINDS = ("attn", "local", "cross", "moe", "local_moe", "dec")
 
@@ -59,6 +60,17 @@ class Ctx:
                                          # static fact about the trace) —
                                          # required by the Pallas attention
                                          # path, whose masking is iota-based
+    paged: Optional[Any] = None          # serving.kv_cache.PagedState:
+                                         # decode writes/reads go through the
+                                         # paged block pool + page tables
+                                         # (flash-decode kernel) instead of
+                                         # the dense per-request cache
+    full_prefill_cache: bool = False     # prefill emits the *full-length*
+                                         # identity-ordered cache for every
+                                         # layer (windowed ones included) —
+                                         # the engine scatters it into pages
+                                         # itself, window semantics applied
+                                         # at page granularity
 
 
 def _alpha_attn(cfg, ctx: Ctx):
@@ -178,10 +190,21 @@ def _self_attention(
     new_cache = None
     if ctx.mode in ("train", "prefill"):
         if ctx.mode == "prefill":
-            clen = min(window, ctx.cache_len) if window else ctx.cache_len
-            new_cache = attn_lib.cache_from_prefill(
-                k, v, ctx.positions, clen, windowed=bool(window), dtype=k.dtype
-            )
+            if ctx.full_prefill_cache:
+                # serving admission path: emit ALL cache_len entries in
+                # identity slot order (windowed layers too) — the engine
+                # applies window/ring semantics when paging this in, and
+                # out-of-range positions (prompt padding) scatter-drop.
+                new_cache = attn_lib.cache_from_prefill(
+                    k, v, ctx.positions, ctx.cache_len, windowed=False,
+                    dtype=k.dtype,
+                )
+            else:
+                clen = min(window, ctx.cache_len) if window else ctx.cache_len
+                new_cache = attn_lib.cache_from_prefill(
+                    k, v, ctx.positions, clen, windowed=bool(window),
+                    dtype=k.dtype,
+                )
         S = x.shape[1]
         acc = jnp.bfloat16 if cfg.attn_acc == "bfloat16" else jnp.float32
         if cfg.use_pallas and ctx.aligned_positions:
@@ -210,7 +233,22 @@ def _self_attention(
                 ctx.positions, ctx.positions, ctx.causal, window
             )
             out = attn_lib.attend(q, k, v, mask, scale, cfg.attn_softcap, acc)
-    else:  # decode
+    elif ctx.paged is not None:  # decode over the paged block pool
+        paged = ctx.paged
+        table = paged.window_table if windowed else paged.global_table
+        new_cache = paged_kv.paged_cache_write(
+            cache, k, v, ctx.positions, table, paged.active,
+            paged.page_size, ring=windowed,
+        )
+        # flash-decode Pallas kernel via the ops dispatcher (ref on CPU,
+        # interpret under REPRO_KERNELS=interpret); scale may be traced —
+        # ops folds it into q.
+        out = ops_lib.decode_attention(
+            q[:, 0], new_cache["k"], new_cache["v"], new_cache["pos"],
+            table, ctx.positions[:, 0], scale=scale, window=window,
+            softcap=cfg.attn_softcap,
+        )[:, None]
+    else:  # decode, dense position-tagged cache
         new_cache = attn_lib.cache_write(cache, k, v, ctx.positions, bool(window))
         kk, vv = new_cache["k"], new_cache["v"]
         mask = attn_lib.make_mask(ctx.positions, new_cache["pos"], True, window)

@@ -1,0 +1,15 @@
+"""Continuous-batching inference subsystem.
+
+- kv_cache.py  — slot-mapped paged KV cache (fixed block pool + per-slot
+  page tables, ring semantics for sliding-window layers)
+- engine.py    — slot scheduler + fully-jitted generation loop
+- sampling.py  — vectorized per-request sampling (greedy/temp/top-k/top-p)
+
+The decode hot path runs on the flash-decode Pallas kernel
+(kernels/decode_attention.py) via kernels.ops.decode_attention.
+
+No re-exports here: models/transformer.py imports serving.kv_cache for the
+paged decode branch, while serving.engine imports the models package — a
+package-level ``from .engine import Engine`` would close that cycle.
+Import ``repro.serving.engine`` directly.
+"""

@@ -1,0 +1,252 @@
+"""Continuous-batching serving engine: one jitted loop, zero per-token Python.
+
+The dense-loop driver (launch/serve.py ``generate``) crosses the host
+dispatch boundary once per generated token and holds the whole batch to one
+prompt length and one stop condition.  This engine instead runs the entire
+serve — admission, prefill-into-slot, batched decode, sampling, EOS/length
+retirement — inside a single ``jax.lax.while_loop`` under one ``jax.jit``:
+
+  - A fixed decode batch of ``n_slots`` *slots*.  A request queue (padded
+    prompts + per-request sampling params, all fixed-shape arrays) is
+    admitted one request per loop step into the first free slot; finished
+    slots retire and free their pages for the next request.  Mixed prompt
+    lengths, staggered admissions and early EOS exits therefore never change
+    any traced shape: after the single warmup compile the loop re-runs for
+    any workload of the same (n_requests, max lengths) envelope with zero
+    recompilation (asserted in tests via the jit cache size).
+  - Prefill runs as a (1, max_prompt_len) forward under ``lax.cond`` with
+    right-padding masked by positions (pads sit at position Pmax: invisible
+    to real queries, scatter-dropped from the cache) and is paged into the
+    slot via serving/kv_cache.admit_slot.
+  - Decode is one (n_slots, 1) forward over the paged block pool — the
+    flash-decode Pallas kernel (kernels/decode_attention.py) on TPU.
+  - Sampling is serving/sampling.py: greedy/temperature/top-k/top-p as
+    traced per-slot params, keys folded from (seed, step, slot).
+
+Throughput-wise the win is structural: the host loop pays dispatch latency
+per token; here XLA sees the whole generation as one program
+(benchmarks/perf_serve.py measures the dense-loop vs engine gap).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.serving import kv_cache, sampling
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    n_slots: int = 4             # fixed decode batch size
+    page_size: int = 16          # tokens per KV page
+    max_prompt_len: int = 64     # prompt buffer length (prompts right-padded)
+    max_gen_len: int = 16        # per-request generation budget
+    eos_token_id: Optional[int] = None   # None -> model config's knob
+
+
+class Engine:
+    """Slot scheduler + fully-jitted generation loop over a paged KV cache.
+
+    One Engine instance owns one compiled program per (n_requests,) queue
+    shape; all request *content* (prompts, lengths, sampling params, seed)
+    is traced data.
+    """
+
+    def __init__(self, model, ecfg: EngineConfig = EngineConfig()):
+        kv_cache.check_servable(model.cfg)
+        if min(ecfg.n_slots, ecfg.page_size, ecfg.max_prompt_len,
+               ecfg.max_gen_len) < 1:
+            raise ValueError(f"engine dimensions must be >= 1, got {ecfg}")
+        self.model = model
+        self.ecfg = ecfg
+        eos = ecfg.eos_token_id
+        if eos is None:
+            eos = model.cfg.eos_token_id
+        self.eos = int(eos)
+        self.spec = kv_cache.build_spec(
+            model.cfg, ecfg.n_slots,
+            ecfg.max_prompt_len + ecfg.max_gen_len, ecfg.page_size,
+        )
+        self.gtable, self.wtable = kv_cache.make_tables(self.spec)
+        self._serve = jax.jit(self._run)
+
+    # ------------------------------------------------------------------
+    def compile_count(self) -> int:
+        """Number of distinct compilations of the serve program (trace
+        stability: stays 1 across runs of the same queue shape)."""
+        return int(self._serve._cache_size())
+
+    # ------------------------------------------------------------------
+    def serve(
+        self,
+        params,
+        prompts,                  # (R, L <= max_prompt_len) int32
+        prompt_lens,              # (R,) int32 true lengths
+        *,
+        temperature=None,         # (R,) float32; <= 0 -> greedy
+        top_k=None,               # (R,) int32;  <= 0 -> off
+        top_p=None,               # (R,) float32; >= 1 -> off
+        seed: int = 0,
+    ) -> Dict[str, jax.Array]:
+        """Serve R requests; returns {"tokens": (R, max_gen_len) int32,
+        "lengths": (R,) int32, "steps": () int32 loop-iteration count}
+        (generated tokens incl. the EOS, if hit)."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        prompt_lens = jnp.asarray(prompt_lens, jnp.int32)
+        R, L = prompts.shape
+        Pmax = self.ecfg.max_prompt_len
+        if L > Pmax:
+            raise ValueError(f"prompt buffer {L} > max_prompt_len {Pmax}")
+        if int(prompt_lens.min()) < 1 or int(prompt_lens.max()) > L:
+            raise ValueError(f"prompt_lens must be in [1, {L}]")
+        if L < Pmax:
+            prompts = jnp.pad(prompts, ((0, 0), (0, Pmax - L)))
+        t0, k0, p0 = sampling.default_params(R)
+        queue = {
+            "prompts": prompts,
+            "lens": jnp.asarray(prompt_lens, jnp.int32),
+            "temperature": t0 if temperature is None
+            else jnp.asarray(temperature, jnp.float32),
+            "top_k": k0 if top_k is None else jnp.asarray(top_k, jnp.int32),
+            "top_p": p0 if top_p is None else jnp.asarray(top_p, jnp.float32),
+            "seed": jnp.asarray(seed, jnp.int32),
+        }
+        return self._serve(params, queue)
+
+    # ------------------------------------------------------------------
+    def _is_eos(self, tok: jax.Array) -> jax.Array:
+        if self.eos < 0:
+            return jnp.zeros_like(tok, bool)
+        return tok == self.eos
+
+    def _run(self, params, queue: Dict[str, Any]) -> Dict[str, jax.Array]:
+        model, cfg, spec = self.model, self.model.cfg, self.spec
+        S = spec.n_slots
+        Pmax, Gmax = self.ecfg.max_prompt_len, self.ecfg.max_gen_len
+        R = queue["prompts"].shape[0]
+        base_key = jax.random.PRNGKey(queue["seed"])
+        # ≤ R admissions + ≤ R*Gmax token steps; the counter is a backstop
+        # so a scheduling bug hangs a test assertion, not the test run.
+        max_steps = R * (Gmax + 1) + S + 2
+
+        state = {
+            "step": jnp.int32(0),
+            "next_req": jnp.int32(0),
+            "active": jnp.zeros((S,), bool),
+            "slot_req": jnp.full((S,), -1, jnp.int32),
+            "slot_pos": jnp.zeros((S,), jnp.int32),   # next write position
+            "slot_last": jnp.zeros((S,), jnp.int32),  # last sampled token
+            "slot_ntok": jnp.zeros((S,), jnp.int32),  # tokens emitted
+            "out_toks": jnp.zeros((R, Gmax), jnp.int32),
+            "out_len": jnp.zeros((R,), jnp.int32),
+            "pools": kv_cache.init_pools(cfg, spec),
+        }
+
+        def req_params(req):
+            r = jnp.maximum(req, 0)
+            return (
+                queue["temperature"][r], queue["top_k"][r], queue["top_p"][r]
+            )
+
+        # -------------------------- admission --------------------------
+        def admit(st):
+            slot = jnp.argmin(st["active"].astype(jnp.int32))  # first free
+            req = st["next_req"]
+            prompt = queue["prompts"][req]
+            plen = queue["lens"][req]
+            idx = jnp.arange(Pmax, dtype=jnp.int32)
+            # pads at position Pmax: > every real q_pos during prefill (so
+            # invisible through make_mask) and scatter-dropped from the
+            # emitted cache (out of range for the Pmax-entry buffer).
+            positions = jnp.where(idx < plen, idx, Pmax)[None]
+            logits, pcache = model.forward(
+                params, prompt[None], positions=positions, mode="prefill",
+                cache_len=Pmax, full_cache=True,
+            )
+            last = logits[0, plen - 1]
+            wrow = None if self.wtable is None else self.wtable[slot]
+            pools = kv_cache.admit_slot(
+                st["pools"], pcache, cfg, spec, self.gtable[slot], wrow, plen
+            )
+            # slot index S is never used by decode's per-slot fold_ins
+            key = jax.random.fold_in(
+                jax.random.fold_in(base_key, st["step"]), jnp.int32(S)
+            )
+            t, k, p = req_params(req)
+            tok = sampling.sample(
+                last[None], t[None], k[None], p[None], key[None]
+            )[0]
+            finished = self._is_eos(tok) | (Gmax <= 1)
+            return {
+                **st,
+                "next_req": req + 1,
+                "active": st["active"].at[slot].set(~finished),
+                "slot_req": st["slot_req"].at[slot].set(req),
+                "slot_pos": st["slot_pos"].at[slot].set(plen),
+                "slot_last": st["slot_last"].at[slot].set(tok),
+                "slot_ntok": st["slot_ntok"].at[slot].set(1),
+                "out_toks": st["out_toks"].at[req, 0].set(tok),
+                "out_len": st["out_len"].at[req].set(1),
+                "pools": pools,
+            }
+
+        # --------------------------- decode ----------------------------
+        def decode(st):
+            active = st["active"]
+            # the decode batch is the slot axis — data-parallel at serve time
+            toks = shard(st["slot_last"][:, None], "slots", None)
+            positions = shard(
+                jnp.where(active, st["slot_pos"], -1)[:, None], "slots", None
+            )
+            paged = kv_cache.PagedState(
+                global_table=self.gtable, window_table=self.wtable,
+                active=active, page_size=spec.page_size,
+            )
+            logits, pools = model.forward(
+                params, toks, positions=positions, mode="decode",
+                cache=st["pools"], paged=paged,
+            )
+            t, k, p = req_params(st["slot_req"])
+            step_key = jax.random.fold_in(base_key, st["step"])
+            keys = jax.vmap(lambda s: jax.random.fold_in(step_key, s))(
+                jnp.arange(S)
+            )
+            tok = sampling.sample(shard(logits[:, 0], "slots", "vocab"), t, k, p, keys)
+            # inactive slots write to row R — out of bounds, dropped
+            wr = jnp.where(active, st["slot_req"], R)
+            out_toks = st["out_toks"].at[wr, st["slot_ntok"]].set(tok)
+            ntok = st["slot_ntok"] + active.astype(jnp.int32)
+            out_len = st["out_len"].at[wr].set(ntok)
+            finished = self._is_eos(tok) | (ntok >= Gmax)
+            return {
+                **st,
+                "active": active & ~finished,
+                "slot_pos": st["slot_pos"] + active.astype(jnp.int32),
+                "slot_last": jnp.where(active, tok, st["slot_last"]),
+                "slot_ntok": jnp.where(active, ntok, st["slot_ntok"]),
+                "out_toks": out_toks,
+                "out_len": out_len,
+                "pools": pools,
+            }
+
+        # ------------------------- the one loop -------------------------
+        def cond(st):
+            pending = st["next_req"] < R
+            return (pending | jnp.any(st["active"])) & (st["step"] < max_steps)
+
+        def body(st):
+            can_admit = (st["next_req"] < R) & ~jnp.all(st["active"])
+            st = jax.lax.cond(can_admit, admit, lambda s: s, st)
+            st = decode(st)
+            return {**st, "step": st["step"] + 1}
+
+        final = jax.lax.while_loop(cond, body, state)
+        return {
+            "tokens": final["out_toks"],
+            "lengths": final["out_len"],
+            "steps": final["step"],
+        }

@@ -1,0 +1,312 @@
+"""Slot-mapped paged KV cache: fixed block pool + per-slot page tables.
+
+Layout
+------
+Each attention layer's cache is a *pool* of fixed-size pages shared by every
+decode slot::
+
+    {"k": (N, P, K, hd), "v": (N, P, K, hd), "pos": (N, P) int32}
+
+(``N`` pages of ``P`` tokens; ``pos`` stores each entry's token position,
+-1 = empty — the same position-tagged convention as the dense cache in
+models/attention.py, which remains the train/prefill/oracle path.)  Layers
+in the repeated group are stacked over ``n_groups`` on a leading axis, so
+the pool pytree drops into ``run_stack``'s scan exactly like the dense
+cache.
+
+Indirection is by *page table*: slot ``s``'s logical page ``j`` lives at
+physical page ``table[s, j]``.  Global layers give each slot
+``ceil(max_total / P)`` logical pages; sliding-window layers give
+``ceil(window / P) + 1`` pages used as a ring (logical page ``t // P`` maps
+to table column ``(t // P) % wp``), so a long decode touches O(window)
+cache, not O(T).  The +1 page makes wraparound safe: the page being
+overwritten only ever holds positions strictly older than the window.
+
+Allocation policy in this PR is static — tables are built once per engine
+with pages *interleaved* across slots (slot s's page j = j * n_slots + s),
+so correctness genuinely depends on the indirection; admission resets the
+slot's pages (pos = -1) instead of popping from a free list.  A dynamic
+allocator (prefix sharing, variable budgets) can replace `make_tables`
+without touching the kernel, the pool layout, or the transformer.
+
+Writes that must not land (inactive slots, out-of-budget positions, prompt
+padding) are redirected to page id ``N`` — one past the pool — and dropped
+by JAX's out-of-bounds scatter semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+# block kinds the paged engine can serve (self-attention KV caches only;
+# recurrent/ssd/cross-attention states need their own slot caches)
+SERVABLE_KINDS = ("attn", "local", "moe", "local_moe")
+
+_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def _windowed(kind: str) -> bool:
+    return kind.startswith("local")
+
+
+def check_servable(cfg) -> None:
+    bad = [k for k in (*cfg.pattern, *cfg.tail) if k not in SERVABLE_KINDS]
+    if bad:
+        raise ValueError(
+            f"{cfg.name}: paged serving engine supports block kinds "
+            f"{SERVABLE_KINDS}, got {bad}; use the dense-loop driver "
+            f"(launch/serve.py --dense) for this architecture"
+        )
+
+
+# ---------------------------------------------------------------------------
+# geometry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Static paged-cache geometry for one (config, engine) pair."""
+
+    n_slots: int
+    page_size: int
+    gp_cols: int           # logical pages per slot, global layers
+    wp_cols: int           # ring pages per slot, windowed layers (0 = none)
+
+    @property
+    def n_global_pages(self) -> int:
+        return self.n_slots * self.gp_cols
+
+    @property
+    def n_window_pages(self) -> int:
+        return self.n_slots * self.wp_cols
+
+
+def build_spec(cfg, n_slots: int, max_total: int, page_size: int) -> PagedSpec:
+    """max_total = max prompt + max generation length per request."""
+    gp = math.ceil(max_total / page_size)
+    wp = 0
+    if any(_windowed(k) for k in (*cfg.pattern, *cfg.tail)):
+        # +1 ring page: the page being overwritten holds only positions
+        # older than the window (wp * P > window + P - 1).  When the window
+        # covers the whole budget the ring never wraps — clamp to gp.
+        wp = min(gp, math.ceil(cfg.window_size / page_size) + 1)
+    return PagedSpec(
+        n_slots=n_slots, page_size=page_size, gp_cols=gp, wp_cols=wp
+    )
+
+
+def make_tables(spec: PagedSpec):
+    """(global_table (S, gp), window_table (S, wp) or None), interleaved:
+    slot s's j-th page is physical page j * S + s of its kind's pool."""
+    s = jnp.arange(spec.n_slots, dtype=jnp.int32)[:, None]
+    gtab = jnp.arange(spec.gp_cols, dtype=jnp.int32)[None, :] * spec.n_slots + s
+    wtab = None
+    if spec.wp_cols:
+        wtab = (
+            jnp.arange(spec.wp_cols, dtype=jnp.int32)[None, :] * spec.n_slots + s
+        )
+    return gtab, wtab
+
+
+@dataclasses.dataclass
+class PagedState:
+    """Runtime handles threaded to the transformer via Ctx.paged."""
+
+    global_table: jax.Array             # (S, gp) int32
+    window_table: Optional[jax.Array]   # (S, wp) int32 or None
+    active: jax.Array                   # (S,) bool — inactive writes dropped
+    page_size: int                      # static
+
+
+# ---------------------------------------------------------------------------
+# pools
+# ---------------------------------------------------------------------------
+
+def init_pools(cfg, spec: PagedSpec) -> Dict[str, Any]:
+    """Zeroed pool pytree mirroring run_stack's cache layout:
+    {"groups": {"<i>_<kind>": {"attn": pool}}, "tail": {...}} with group
+    pools stacked over n_groups."""
+    K, hd = cfg.n_kv_heads, cfg.d_head
+    dtype = _DTYPES[cfg.dtype]
+
+    def pool(n_pages, stacked):
+        lead = (cfg.n_groups,) if stacked else ()
+        return {
+            "k": jnp.zeros((*lead, n_pages, spec.page_size, K, hd), dtype),
+            "v": jnp.zeros((*lead, n_pages, spec.page_size, K, hd), dtype),
+            "pos": jnp.full((*lead, n_pages, spec.page_size), -1, jnp.int32),
+        }
+
+    def n_pages(kind):
+        return spec.n_window_pages if _windowed(kind) else spec.n_global_pages
+
+    return {
+        "groups": {
+            f"{i}_{kind}": {"attn": pool(n_pages(kind), True)}
+            for i, kind in enumerate(cfg.pattern)
+        },
+        "tail": {
+            f"{i}_{kind}": {"attn": pool(n_pages(kind), False)}
+            for i, kind in enumerate(cfg.tail)
+        },
+    }
+
+
+def pool_bytes(cfg, spec: PagedSpec) -> int:
+    """Total paged-pool footprint (all layers), for logging/benchmarks."""
+    K, hd = cfg.n_kv_heads, cfg.d_head
+    itemsize = jnp.dtype(_DTYPES[cfg.dtype]).itemsize
+    per_tok = K * hd * 2 * itemsize + 4
+    kinds = [k for k in cfg.pattern for _ in range(cfg.n_groups)] + list(cfg.tail)
+    tot = 0
+    for kind in kinds:
+        n = spec.n_window_pages if _windowed(kind) else spec.n_global_pages
+        tot += n * spec.page_size * per_tok
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# decode write (called from the transformer's decode branch, per layer)
+# ---------------------------------------------------------------------------
+
+def paged_cache_write(
+    cache: Dict[str, jax.Array],   # {"k": (N,P,K,hd), "v": ..., "pos": (N,P)}
+    k_new: jax.Array,              # (B, 1, K, hd)
+    v_new: jax.Array,
+    positions: jax.Array,          # (B, 1) int32; -1 = inactive
+    table: jax.Array,              # (B, C) int32 — this slot batch's pages
+    active: jax.Array,             # (B,) bool
+    page_size: int,
+    ring: bool,
+) -> Dict[str, jax.Array]:
+    """Scatter one decode token per slot into its page; returns new pools.
+
+    Invalid writes (inactive slot, pos < 0, past the page budget) go to page
+    id N — out of bounds — and are dropped by JAX scatter semantics, so a
+    retired slot can never corrupt pages re-used by its successor.
+    """
+    N = cache["k"].shape[0]
+    C = table.shape[1]
+    pos = positions[:, 0]
+    safe = jnp.maximum(pos, 0)
+    logical = safe // page_size
+    if ring:
+        col = logical % C
+        ok = pos >= 0
+    else:
+        col = jnp.minimum(logical, C - 1)
+        ok = (pos >= 0) & (logical < C)
+    page = jnp.take_along_axis(table, col[:, None], axis=1)[:, 0]
+    page = jnp.where(ok & active, page, N)
+    off = safe % page_size
+    k = cache["k"].at[page, off].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[page, off].set(v_new[:, 0].astype(cache["v"].dtype))
+    p = cache["pos"].at[page, off].set(pos)
+    k = shard(k, "pages", None, "kv_heads", "head_dim")
+    v = shard(v, "pages", None, "kv_heads", "head_dim")
+    return {"k": k, "v": v, "pos": p}
+
+
+# ---------------------------------------------------------------------------
+# admission: reset a slot's pages + scatter a full-length prefill cache
+# ---------------------------------------------------------------------------
+
+def admit_slot(
+    pools: Dict[str, Any],
+    pcache: Dict[str, Any],
+    cfg,
+    spec: PagedSpec,
+    gtab_row: jax.Array,             # (gp,) int32 — the slot's global pages
+    wtab_row: Optional[jax.Array],   # (wp,) int32 or None
+    plen: jax.Array,                 # () int32 — true prompt length
+) -> Dict[str, Any]:
+    """Scatter a (B=1) *full-length* prefill cache (forward(...,
+    full_cache=True): every layer emits all ``Pmax`` entries, identity slot
+    order, padding dropped) into the slot's pages.
+
+    The slot's pages are first invalidated (pos = -1) so a previous
+    occupant's entries can never alias the new request's positions; stale
+    k/v bytes may remain but are masked by pos.
+    """
+    # prefill emission is identity-ordered: buffer slot t holds position t
+    # for t < plen and is empty (-1, dropped padding) otherwise.
+    any_leaf = next(iter(pcache["groups"].values()))["attn"]["k"] if (
+        pcache["groups"]
+    ) else next(iter(pcache["tail"].values()))["attn"]["k"]
+    Pmax = any_leaf.shape[-3]
+    t = jnp.arange(Pmax, dtype=jnp.int32)
+    valid = t < plen
+    off = t % spec.page_size
+    pos_row = jnp.where(valid, t, -1)
+
+    gcol = jnp.minimum(t // spec.page_size, spec.gp_cols - 1)
+    g_ok = valid & (t // spec.page_size < spec.gp_cols)
+    gpage = jnp.where(g_ok, gtab_row[gcol], spec.n_global_pages)
+    wpage = None
+    if spec.wp_cols:
+        wcap = spec.wp_cols * spec.page_size
+        w_ok = valid & (t >= plen - wcap)   # only the ring's reach survives
+        wcol = (t // spec.page_size) % spec.wp_cols
+        wpage = jnp.where(w_ok, wtab_row[wcol], spec.n_window_pages)
+
+    out: Dict[str, Any] = {"groups": {}, "tail": {}}
+    for section, kinds in (("groups", cfg.pattern), ("tail", cfg.tail)):
+        for i, kind in enumerate(kinds):
+            key = f"{i}_{kind}"
+            pool = pools[section][key]["attn"]
+            src = pcache[section][key]["attn"]
+            win = _windowed(kind)
+            page = wpage if win else gpage
+            rows = wtab_row if win else gtab_row
+            if section == "groups":
+                ksrc, vsrc = src["k"][:, 0], src["v"][:, 0]  # (G, Pmax, K, hd)
+                pos_pool = pool["pos"].at[:, rows].set(-1)
+                new = {
+                    "k": pool["k"].at[:, page, off].set(
+                        ksrc.astype(pool["k"].dtype)
+                    ),
+                    "v": pool["v"].at[:, page, off].set(
+                        vsrc.astype(pool["v"].dtype)
+                    ),
+                    "pos": pos_pool.at[:, page, off].set(pos_row),
+                }
+            else:
+                ksrc, vsrc = src["k"][0], src["v"][0]        # (Pmax, K, hd)
+                pos_pool = pool["pos"].at[rows].set(-1)
+                new = {
+                    "k": pool["k"].at[page, off].set(
+                        ksrc.astype(pool["k"].dtype)
+                    ),
+                    "v": pool["v"].at[page, off].set(
+                        vsrc.astype(pool["v"].dtype)
+                    ),
+                    "pos": pos_pool.at[page, off].set(pos_row),
+                }
+            out[section][key] = {"attn": new}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# test/oracle helper
+# ---------------------------------------------------------------------------
+
+def gather_slot(
+    pool: Dict[str, jax.Array], table_row: jax.Array
+) -> Dict[str, jax.Array]:
+    """Contiguous {"k": (C*P, K, hd), "v": ..., "pos": (C*P,)} view of one
+    slot's pages from an *unstacked* pool leaf — the dense-cache-shaped
+    oracle view used by tests."""
+    N = pool["pos"].shape[-2]
+    tab = jnp.clip(table_row, 0, N - 1)
+    K, hd = pool["k"].shape[-2:]
+    return {
+        "k": pool["k"][tab].reshape(-1, K, hd),
+        "v": pool["v"][tab].reshape(-1, K, hd),
+        "pos": pool["pos"][tab].reshape(-1),
+    }

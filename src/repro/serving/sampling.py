@@ -1,0 +1,99 @@
+"""Vectorized per-request sampling: greedy / temperature / top-k / top-p.
+
+Every knob is a *traced per-slot array*, so one jitted sampler serves a
+decode batch mixing greedy and stochastic requests — the engine never
+recompiles when a request's sampling params change:
+
+  - temperature <= 0  -> greedy (argmax), the knob that makes engine output
+    comparable token-for-token with the dense-loop oracle;
+  - top_k <= 0        -> no top-k cut;
+  - top_p >= 1        -> no nucleus cut.
+
+Sort-free by design.  The obvious implementation (argsort the vocab, mask
+by rank / cumulative probability) costs an XLA sort per slot per decoded
+token — measured ~0.8 ms/step on CPU for V=512, dwarfing the model forward
+inside the engine's while_loop, and O(V log V) at real vocab sizes.  Both
+cuts are instead computed as *value thresholds* found by bisection:
+
+  top-k:  keep x > tau_k  where tau_k = sup{v : |{x > v}| >= k}
+  top-p:  keep x > tau_p  where tau_p = sup{v : mass(x > v) >= top_p}
+          (mass = softmax probability of the strictly-greater set, i.e. the
+          sorted exclusive cumsum, so the mode always survives)
+
+Each bisection step is one O(V) compare+reduce; both thresholds share one
+fori_loop (~30 steps to f32 precision).  Exact whenever the logit values
+around the cut are distinct; exact ties at the threshold are kept or cut
+together (an argsort breaks such ties arbitrarily anyway).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import NEG_INF  # the house masking constant
+
+_BISECT_STEPS = 30
+
+
+def default_params(n: int):
+    """Greedy defaults: (temperature, top_k, top_p) arrays for n requests."""
+    return (
+        jnp.zeros((n,), jnp.float32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.ones((n,), jnp.float32),
+    )
+
+
+def _filter_thresholds(scaled, top_k, top_p):
+    """(tau_k, tau_p) value thresholds for one row of scaled logits."""
+    V = scaled.shape[-1]
+    probs = jax.nn.softmax(scaled)
+    x_max = jnp.max(scaled)
+    lo0 = jnp.min(scaled) - 1.0
+    kk = jnp.where(top_k > 0, top_k, V)
+    tp = jnp.where(top_p >= 1.0, 2.0, top_p)  # 2.0: mass(x > lo0)=1 < 2 -> keep all
+
+    def body(_, st):
+        lo_k, hi_k, lo_p, hi_p = st
+        mid_k = 0.5 * (lo_k + hi_k)
+        above_k = jnp.sum(scaled > mid_k)
+        lo_k, hi_k = jnp.where(
+            above_k >= kk, jnp.array([mid_k, hi_k]), jnp.array([lo_k, mid_k])
+        )
+        mid_p = 0.5 * (lo_p + hi_p)
+        mass_p = jnp.sum(jnp.where(scaled > mid_p, probs, 0.0))
+        lo_p, hi_p = jnp.where(
+            mass_p >= tp, jnp.array([mid_p, hi_p]), jnp.array([lo_p, mid_p])
+        )
+        return lo_k, hi_k, lo_p, hi_p
+
+    lo_k, _, lo_p, _ = jax.lax.fori_loop(
+        0, _BISECT_STEPS, body, (lo0, x_max, lo0, x_max)
+    )
+    return lo_k, lo_p
+
+
+def _sample_one(logits, temp, top_k, top_p, key):
+    logits = logits.astype(jnp.float32)
+    greedy_tok = jnp.argmax(logits).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temp, 1e-6)
+    tau_k, tau_p = _filter_thresholds(scaled, top_k, top_p)
+    keep = scaled > jnp.maximum(tau_k, tau_p)
+    keep |= scaled == jnp.max(scaled)      # the mode always survives
+    masked = jnp.where(keep, scaled, NEG_INF)
+    tok = jax.random.categorical(key, masked).astype(jnp.int32)
+    return jnp.where(temp <= 0.0, greedy_tok, tok)
+
+
+_sample_vmapped = jax.vmap(_sample_one)
+
+
+def sample(
+    logits: jax.Array,        # (S, V)
+    temperature: jax.Array,   # (S,) float32
+    top_k: jax.Array,         # (S,) int32;  <= 0 disables
+    top_p: jax.Array,         # (S,) float32; >= 1 disables
+    keys: jax.Array,          # (S, 2) uint32 — one PRNG key per slot
+) -> jax.Array:
+    """Per-slot next-token sampling; returns (S,) int32."""
+    return _sample_vmapped(logits, temperature, top_k, top_p, keys)

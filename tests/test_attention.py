@@ -1,13 +1,18 @@
-"""Chunked attention and KV-cache invariants (hypothesis property tests)."""
+"""Chunked attention and KV-cache invariants.  The chunked-vs-dense
+property test rides along only when hypothesis is installed; the KV-cache
+tests run everywhere."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
 
 from repro.models import attention as A
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def _qkv(B, S, H, K, d, seed=0):
@@ -19,29 +24,30 @@ def _qkv(B, S, H, K, d, seed=0):
     )
 
 
-@settings(max_examples=12, deadline=None)
-@given(
-    B=st.integers(1, 2),
-    nchunks=st.integers(2, 4),
-    chunk=st.sampled_from([16, 32]),
-    K=st.sampled_from([1, 2]),
-    window=st.sampled_from([0, 8, 24]),
-    unroll=st.booleans(),
-    seed=st.integers(0, 3),
-)
-def test_chunked_equals_dense(B, nchunks, chunk, K, window, unroll, seed):
-    S = nchunks * chunk
-    H, d = 2 * K, 8
-    q, k, v = _qkv(B, S, H, K, d, seed)
-    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
-    dense = A.attend(q, k, v, A.make_mask(pos, pos, True, window), 0.125)
-    chunked = A.attend_chunked(
-        q, k, v, pos, pos, 0.125, causal=True, window=window,
-        chunk=chunk, unroll=unroll,
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        B=st.integers(1, 2),
+        nchunks=st.integers(2, 4),
+        chunk=st.sampled_from([16, 32]),
+        K=st.sampled_from([1, 2]),
+        window=st.sampled_from([0, 8, 24]),
+        unroll=st.booleans(),
+        seed=st.integers(0, 3),
     )
-    np.testing.assert_allclose(
-        np.asarray(chunked), np.asarray(dense), atol=2e-5
-    )
+    def test_chunked_equals_dense(B, nchunks, chunk, K, window, unroll, seed):
+        S = nchunks * chunk
+        H, d = 2 * K, 8
+        q, k, v = _qkv(B, S, H, K, d, seed)
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        dense = A.attend(q, k, v, A.make_mask(pos, pos, True, window), 0.125)
+        chunked = A.attend_chunked(
+            q, k, v, pos, pos, 0.125, causal=True, window=window,
+            chunk=chunk, unroll=unroll,
+        )
+        np.testing.assert_allclose(
+            np.asarray(chunked), np.asarray(dense), atol=2e-5
+        )
 
 
 def test_windowed_band_excludes_far_tokens():
@@ -92,6 +98,45 @@ class TestKVCache:
             np.testing.assert_allclose(
                 np.asarray(pre[key]), np.asarray(manual[key]), atol=1e-6
             )
+
+    def test_ring_wraparound_long_decode_matches_full_cache_oracle(self):
+        """Satellite (PR 5): decode far past `window` with the ring buffer
+        (cache_write/make_mask over a window-sized cache) must produce the
+        same attention output, step for step, as a full-length cache with
+        the window mask — including while the ring wraps repeatedly."""
+        B, K, H, d, w, T = 1, 2, 4, 8, 5, 18
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q_all = jax.random.normal(ks[0], (B, T, H, d))
+        k_all = jax.random.normal(ks[1], (B, T, K, d))
+        v_all = jax.random.normal(ks[2], (B, T, K, d))
+        ring = A.init_kv_cache(B, w, K, d, jnp.float32)
+        full = A.init_kv_cache(B, T, K, d, jnp.float32)
+        for t in range(T):
+            pos = jnp.full((B, 1), t, jnp.int32)
+            ring = A.cache_write(
+                ring, k_all[:, t:t+1], v_all[:, t:t+1], pos, windowed=True
+            )
+            full = A.cache_write(
+                full, k_all[:, t:t+1], v_all[:, t:t+1], pos, windowed=False
+            )
+            q = q_all[:, t:t+1]
+            got = A.attend(
+                q, ring["k"], ring["v"],
+                A.make_mask(pos, ring["pos"], True, w), 0.125,
+            )
+            want = A.attend(
+                q, full["k"], full["v"],
+                A.make_mask(pos, full["pos"], True, w), 0.125,
+            )
+            np.testing.assert_allclose(
+                np.asarray(got), np.asarray(want), atol=2e-5,
+                err_msg=f"step {t}",
+            )
+            # ring invariant: exactly the last min(t+1, w) positions live
+            live = sorted(
+                p for p in np.asarray(ring["pos"][0]).tolist() if p >= 0
+            )
+            assert live == list(range(max(0, t + 1 - w), t + 1))
 
     def test_windowed_prefill_keeps_last_window(self):
         B, S, K, d, w = 1, 10, 1, 2, 4

@@ -1,0 +1,432 @@
+"""Continuous-batching engine tests: oracle equivalence, trace stability,
+EOS retirement, paged-cache invariants, sampling, PRNG determinism.
+
+The correctness anchor is the dense-loop driver (launch/serve.py
+``generate``): one request at a time over the dense position-tagged cache.
+The engine — paged pools, page tables, slot scheduler, one jitted
+while_loop — must reproduce it token-for-token under greedy sampling,
+including sliding-window ring wraparound and staggered admissions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.kernels import ref
+from repro.launch.serve import _count_generated, generate
+from repro.models import attention as A
+from repro.models.model import build_model
+from repro.serving import kv_cache, sampling
+from repro.serving.engine import Engine, EngineConfig
+
+
+# ---------------------------------------------------------------------------
+# fixtures: one tiny global-attention model and one windowed (gemma2-style,
+# shrunk window so decode wraps the ring several times)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def global_m():
+    cfg = get_smoke_config("smollm-135m").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def global_engine(global_m):
+    _, model, _ = global_m
+    return Engine(model, EngineConfig(
+        n_slots=2, page_size=4, max_prompt_len=16, max_gen_len=6
+    ))
+
+
+@pytest.fixture(scope="module")
+def windowed_m():
+    cfg = get_smoke_config("gemma2-2b").replace(dtype="float32", window_size=6)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _prompts(cfg, R, L, seed=1):
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(seed), (R, L), 0, cfg.vocab_size
+    )
+    lens = jax.random.randint(jax.random.PRNGKey(seed + 1), (R,), 1, L + 1)
+    return prompts, lens
+
+
+def _oracle(model, params, prompts, lens, gen_len, eos=-1):
+    """Serial dense-cache reference: one request at a time, exact lengths."""
+    rows = []
+    for r in range(prompts.shape[0]):
+        L = int(lens[r])
+        rows.append(np.asarray(generate(
+            model, params, prompts[r:r + 1, :L], gen_len, eos_token_id=eos
+        )[0]))
+    return np.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# engine vs oracle (greedy, token-for-token)
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_dense_oracle(global_m, global_engine):
+    """Mixed prompt lengths, R > n_slots (staggered admissions/retirements)."""
+    cfg, model, params = global_m
+    prompts, lens = _prompts(cfg, R=5, L=16)
+    out = global_engine.serve(params, prompts, lens)
+    want = _oracle(model, params, prompts, lens, 6)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]), want)
+    assert np.asarray(out["lengths"]).tolist() == [6] * 5
+
+
+def test_engine_trace_stable_zero_recompiles(global_m, global_engine):
+    """Different prompts, lengths, seeds and sampling params — same compiled
+    program.  The whole serve is one jit entry; its cache must stay at 1."""
+    cfg, model, params = global_m
+    p1, l1 = _prompts(cfg, R=5, L=16, seed=3)
+    p2, l2 = _prompts(cfg, R=5, L=16, seed=9)
+    global_engine.serve(params, p1, l1, seed=0)
+    n_after_warmup = global_engine.compile_count()
+    global_engine.serve(params, p2, l2, seed=7,
+                        temperature=jnp.full((5,), 0.5))
+    global_engine.serve(params, p1, l2, seed=1)
+    assert global_engine.compile_count() == n_after_warmup == 1
+
+
+def test_engine_deterministic_sampling(global_m, global_engine):
+    cfg, model, params = global_m
+    prompts, lens = _prompts(cfg, R=5, L=16, seed=4)
+    temp = jnp.full((5,), 0.8)
+    a = global_engine.serve(params, prompts, lens, temperature=temp, seed=11)
+    b = global_engine.serve(params, prompts, lens, temperature=temp, seed=11)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    c = global_engine.serve(params, prompts, lens, temperature=temp, seed=12)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_engine_mixed_sampling_batch(global_m, global_engine):
+    """Greedy rows of a mixed greedy/stochastic batch still match the
+    oracle — sampling params are per-slot traced data."""
+    cfg, model, params = global_m
+    prompts, lens = _prompts(cfg, R=5, L=16, seed=5)
+    temp = jnp.array([0.0, 1.0, 0.0, 0.9, 0.0])
+    out = global_engine.serve(params, prompts, lens, temperature=temp, seed=2)
+    want = _oracle(model, params, prompts, lens, 6)
+    got = np.asarray(out["tokens"])
+    for r in (0, 2, 4):
+        np.testing.assert_array_equal(got[r], want[r])
+
+
+def test_engine_matches_oracle_with_tail_blocks(global_m):
+    """Non-repeated tail blocks get *unstacked* pools — exercise that path
+    (no assigned servable arch has a tail, so build one)."""
+    cfg, _, _ = global_m
+    cfg = cfg.replace(tail=("attn",))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, EngineConfig(
+        n_slots=2, page_size=4, max_prompt_len=8, max_gen_len=5
+    ))
+    prompts, lens = _prompts(cfg, R=3, L=8, seed=7)
+    out = eng.serve(params, prompts, lens)
+    want = _oracle(model, params, prompts, lens, 5)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]), want)
+
+
+def test_engine_matches_oracle_windowed_ring_wraparound(windowed_m):
+    """gemma2-style local/global alternation + softcap, window 6, 20 decode
+    steps: the paged ring wraps several times and must still match the
+    dense ring-buffer oracle token-for-token."""
+    cfg, model, params = windowed_m
+    eng = Engine(model, EngineConfig(
+        n_slots=2, page_size=4, max_prompt_len=12, max_gen_len=20
+    ))
+    prompts, lens = _prompts(cfg, R=3, L=12)
+    out = eng.serve(params, prompts, lens)
+    want = _oracle(model, params, prompts, lens, 20)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]), want)
+
+
+# ---------------------------------------------------------------------------
+# EOS / stop-token retirement
+# ---------------------------------------------------------------------------
+
+def test_eos_retirement_matches_oracle(global_m):
+    cfg, model, params = global_m
+    prompts, lens = _prompts(cfg, R=4, L=16, seed=6)
+    # find a token each greedy continuation emits, then serve with it as EOS
+    probe = _oracle(model, params, prompts, lens, 6)
+    eos = int(probe[0][2])
+    eng = Engine(model, EngineConfig(
+        n_slots=2, page_size=4, max_prompt_len=16, max_gen_len=6,
+        eos_token_id=eos,
+    ))
+    out = eng.serve(params, prompts, lens)
+    want = _oracle(model, params, prompts, lens, 6, eos=eos)
+    toks, out_len = np.asarray(out["tokens"]), np.asarray(out["lengths"])
+    # retirement happens exactly at the first EOS hit of the greedy stream
+    assert out_len[0] == int(np.argmax(probe[0] == eos)) + 1 < 6
+    for r in range(4):
+        n = out_len[r]
+        np.testing.assert_array_equal(toks[r, :n], want[r, :n])
+        if n < 6:
+            assert toks[r, n - 1] == eos          # EOS included
+            assert (toks[r, n:] == 0).all()        # retired: nothing after
+            assert (want[r, n:] == eos).all()      # oracle pads with EOS
+    # EOS exits at varying steps are still one compiled program
+    p2, l2 = _prompts(cfg, R=4, L=16, seed=13)
+    eng.serve(params, p2, l2)
+    assert eng.compile_count() == 1
+
+
+def test_eos_config_knob_flows_to_engine(global_m):
+    cfg, model, params = global_m
+    model2 = build_model(cfg.replace(eos_token_id=7))
+    eng = Engine(model2, EngineConfig(n_slots=1, max_prompt_len=8,
+                                      max_gen_len=4))
+    assert eng.eos == 7
+    assert Engine(model2, EngineConfig(
+        n_slots=1, max_prompt_len=8, max_gen_len=4, eos_token_id=9
+    )).eos == 9
+
+
+def test_engine_rejects_non_attention_arch():
+    model = build_model(get_smoke_config("mamba2-130m"))
+    with pytest.raises(ValueError, match="paged serving"):
+        Engine(model, EngineConfig())
+
+
+def test_engine_rejects_degenerate_dimensions(global_m):
+    _, model, _ = global_m
+    with pytest.raises(ValueError, match=">= 1"):
+        Engine(model, EngineConfig(max_gen_len=0))
+
+
+# ---------------------------------------------------------------------------
+# dense-loop driver satellites: PRNG threading + EOS
+# ---------------------------------------------------------------------------
+
+def test_generate_key_threading_deterministic(global_m):
+    cfg, model, params = global_m
+    prompts, _ = _prompts(cfg, R=2, L=8, seed=8)
+    a = generate(model, params, prompts, 5, temperature=1.0, seed=3)
+    b = generate(model, params, prompts, 5, temperature=1.0, seed=3)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = generate(model, params, prompts, 5, temperature=1.0, seed=4)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_generate_first_step_key_not_reused(global_m, monkeypatch):
+    """Regression for the PR-5 fix: the root key must only ever be split —
+    the first sampled token used to consume `key` directly and the loop
+    then split the same key again."""
+    cfg, model, params = global_m
+    seen = []
+    orig = jax.random.categorical
+
+    def spy(key, logits, *a, **kw):
+        seen.append(np.asarray(key).tolist())
+        return orig(key, logits, *a, **kw)
+
+    monkeypatch.setattr(jax.random, "categorical", spy)
+    prompts, _ = _prompts(cfg, R=2, L=8, seed=8)
+    generate(model, params, prompts, 4, temperature=1.0, seed=0)
+    root = np.asarray(jax.random.PRNGKey(0)).tolist()
+    assert root not in seen                      # root key never consumed
+    assert len({tuple(k) for k in seen}) == len(seen)  # all step keys distinct
+
+
+def test_count_generated_excludes_eos_padding():
+    toks = np.array([[5, 9, 9, 9], [1, 2, 3, 4], [9, 9, 9, 9]])
+    assert _count_generated(toks, eos=9) == 2 + 4 + 1
+    assert _count_generated(toks, eos=-1) == 12
+
+
+def test_generate_eos_early_stop(global_m):
+    cfg, model, params = global_m
+    prompts, _ = _prompts(cfg, R=2, L=8, seed=2)
+    probe = np.asarray(generate(model, params, prompts, 6))
+    eos = int(probe[0][1])
+    toks = np.asarray(generate(model, params, prompts, 6, eos_token_id=eos))
+    i = int(np.argmax(toks[0] == eos))
+    np.testing.assert_array_equal(toks[0][:i + 1], probe[0][:i + 1])
+    assert (toks[0][i:] == eos).all()
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache invariants (no model: pool/table machinery alone)
+# ---------------------------------------------------------------------------
+
+def _empty_pool(n_pages, P=4, K=2, hd=4):
+    return {
+        "k": jnp.zeros((n_pages, P, K, hd), jnp.float32),
+        "v": jnp.zeros((n_pages, P, K, hd), jnp.float32),
+        "pos": jnp.full((n_pages, P), -1, jnp.int32),
+    }
+
+
+def test_paged_decode_writes_match_dense_cache():
+    """A token-by-token paged write stream reassembles (via the page table)
+    into exactly the dense cache_write stream."""
+    S, P, K, hd, T = 2, 4, 2, 4, 13
+    spec = kv_cache.PagedSpec(n_slots=S, page_size=P, gp_cols=5, wp_cols=0)
+    gtab, _ = kv_cache.make_tables(spec)
+    pool = _empty_pool(spec.n_global_pages, P, K, hd)
+    dense = A.init_kv_cache(S, 20, K, hd, jnp.float32)
+    active = jnp.ones((S,), bool)
+    for t in range(T):
+        kn = jax.random.normal(jax.random.PRNGKey(t), (S, 1, K, hd))
+        vn = kn + 1.0
+        ps = jnp.full((S, 1), t, jnp.int32)
+        pool = kv_cache.paged_cache_write(
+            pool, kn, vn, ps, gtab, active, P, ring=False
+        )
+        dense = A.cache_write(dense, kn, vn, ps, windowed=False)
+    for s in range(S):
+        g = kv_cache.gather_slot(pool, gtab[s])
+        np.testing.assert_allclose(
+            np.asarray(g["k"][:T]), np.asarray(dense["k"][s, :T]), atol=0
+        )
+        np.testing.assert_allclose(
+            np.asarray(g["v"][:T]), np.asarray(dense["v"][s, :T]), atol=0
+        )
+        assert np.asarray(g["pos"][:T]).tolist() == list(range(T))
+        assert (np.asarray(g["pos"][T:]) == -1).all()
+
+
+def test_paged_ring_wraparound_matches_full_cache_oracle():
+    """Satellite: long decode past the window.  The ring pool's *visible set*
+    and attention output must match a full (unwindowed) cache + window mask
+    — the same oracle the dense ring buffer is held to."""
+    S, P, K, hd = 1, 4, 2, 4
+    window, T = 7, 23                       # wraps the 3-page ring twice
+    wp = 3                                  # ceil(7/4) + 1
+    spec = kv_cache.PagedSpec(n_slots=S, page_size=P, gp_cols=8, wp_cols=wp)
+    _, wtab = kv_cache.make_tables(spec)
+    pool = _empty_pool(spec.n_window_pages, P, K, hd)
+    full_k = jax.random.normal(jax.random.PRNGKey(0), (1, T, K, hd))
+    full_v = jax.random.normal(jax.random.PRNGKey(1), (1, T, K, hd))
+    active = jnp.ones((S,), bool)
+    for t in range(T):
+        pool = kv_cache.paged_cache_write(
+            pool, full_k[:, t:t + 1], full_v[:, t:t + 1],
+            jnp.full((S, 1), t, jnp.int32), wtab, active, P, ring=True,
+        )
+    # visible set: exactly the last `window` positions, each stored once
+    g = kv_cache.gather_slot(pool, wtab[0])
+    vis = sorted(p for p in np.asarray(g["pos"]).tolist()
+                 if 0 <= p <= T - 1 and T - 1 - p < window)
+    assert vis == list(range(T - window, T))
+    # attention over the ring == attention over the full cache + window mask
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, K * 2, hd))
+    q_pos = jnp.array([T - 1], jnp.int32)
+    got = ref.decode_attention_ref(
+        q, pool["k"], pool["v"], pool["pos"], wtab[:1], q_pos,
+        scale=0.3, window=window,
+    )
+    kv_pos = jnp.arange(T)[None]
+    mask = A.make_mask(q_pos[:, None], kv_pos, causal=True, window=window)
+    want = A.attend(q[:, None], full_k, full_v, mask, 0.3)[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_paged_write_inactive_and_retired_slots_drop():
+    S, P, K, hd = 2, 4, 2, 4
+    spec = kv_cache.PagedSpec(n_slots=S, page_size=P, gp_cols=3, wp_cols=0)
+    gtab, _ = kv_cache.make_tables(spec)
+    pool = _empty_pool(spec.n_global_pages, P, K, hd)
+    kn = jnp.ones((S, 1, K, hd))
+    ps = jnp.zeros((S, 1), jnp.int32)
+    out = kv_cache.paged_cache_write(
+        pool, kn, kn, ps, gtab, jnp.array([True, False]), P, ring=False
+    )
+    assert int(out["pos"][gtab[0, 0], 0]) == 0          # active slot landed
+    assert int(out["pos"][gtab[1, 0], 0]) == -1         # inactive dropped
+    # position past the page budget is dropped too (no wrap-corruption)
+    out2 = kv_cache.paged_cache_write(
+        pool, kn, kn, jnp.full((S, 1), 3 * P + 1, jnp.int32), gtab,
+        jnp.ones((S,), bool), P, ring=False,
+    )
+    assert (np.asarray(out2["pos"]) == -1).all()
+
+
+def test_admit_slot_resets_previous_occupant(global_m):
+    """Re-admission must invalidate the slot's pages: a stale entry from the
+    previous request (same positions!) would otherwise stay visible."""
+    cfg, model, params = global_m
+    Pmax = 8
+    spec = kv_cache.build_spec(cfg, 2, Pmax, 4)
+    gtab, wtab = kv_cache.make_tables(spec)
+    pools = kv_cache.init_pools(cfg, spec)
+    # fabricate a full-length prefill cache pytree of the right structure
+    logits, pcache = model.forward(
+        params, jnp.zeros((1, Pmax), jnp.int32),
+        positions=jnp.arange(Pmax)[None], mode="prefill", cache_len=Pmax,
+        full_cache=True,
+    )
+    pools = kv_cache.admit_slot(
+        pools, pcache, cfg, spec, gtab[0],
+        None if wtab is None else wtab[0], jnp.int32(Pmax),
+    )
+    key0 = next(iter(pools["groups"]))
+    pool0 = jax.tree_util.tree_map(lambda x: x[0], pools["groups"][key0]["attn"])
+    g = kv_cache.gather_slot(pool0, gtab[0])
+    assert np.asarray(g["pos"][:Pmax]).tolist() == list(range(Pmax))
+    # shorter re-admission: old positions [3..7] must be gone
+    pools = kv_cache.admit_slot(
+        pools, pcache, cfg, spec, gtab[0],
+        None if wtab is None else wtab[0], jnp.int32(3),
+    )
+    pool0 = jax.tree_util.tree_map(lambda x: x[0], pools["groups"][key0]["attn"])
+    g = kv_cache.gather_slot(pool0, gtab[0])
+    assert np.asarray(g["pos"][:3]).tolist() == [0, 1, 2]
+    assert (np.asarray(g["pos"][3:]) == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+def _keys(n, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n)
+
+
+def test_sampling_greedy_and_topk1():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (3, 32))
+    t, k, p = sampling.default_params(3)
+    got = sampling.sample(logits, t, k, p, _keys(3))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jnp.argmax(logits, -1))
+    )
+    # top_k = 1 pins any temperature to argmax
+    got = sampling.sample(
+        logits, jnp.full((3,), 5.0), jnp.ones((3,), jnp.int32), p, _keys(3, 1)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(jnp.argmax(logits, -1))
+    )
+
+
+def test_sampling_topk_topp_support():
+    logits = jnp.log(jnp.array([[0.5, 0.25, 0.15, 0.06, 0.04]]))
+    temp = jnp.ones((1,))
+    # top_k = 2: support is exactly the two largest
+    toks = [int(sampling.sample(
+        logits, temp, jnp.array([2], jnp.int32), jnp.ones((1,)),
+        _keys(1, i))[0]) for i in range(64)]
+    assert set(toks) <= {0, 1} and len(set(toks)) == 2
+    # top_p = 0.8: exclusive-cumsum keep rule -> {0.5, 0.25, 0.15}
+    toks = [int(sampling.sample(
+        logits, temp, jnp.zeros((1,), jnp.int32), jnp.array([0.8]),
+        _keys(1, i))[0]) for i in range(128)]
+    assert set(toks) <= {0, 1, 2} and len(set(toks)) == 3
+    # tiny top_p keeps only the mode
+    toks = [int(sampling.sample(
+        logits, temp, jnp.zeros((1,), jnp.int32), jnp.array([1e-6]),
+        _keys(1, i))[0]) for i in range(16)]
+    assert set(toks) == {0}
