@@ -159,29 +159,93 @@ def baseline_vs_optimized() -> str:
     return "\n".join(lines)
 
 
+def serving_kernel_rows() -> List[Dict]:
+    """Analytic roofline terms for the paged decode-attention kernels
+    (serving hot loop), per invocation at a representative decode shape.
+
+    B slots each attend over S = C*P banded context tokens; the multi-query
+    variant (T = k+1 rows, the speculative verify) reads the same KV pages
+    ONCE for all T queries, so its per-token HBM traffic is ~1/T of the
+    single-query kernel's — that traffic ratio is the roofline argument for
+    batching the verify, independent of measured wall time.
+    """
+    B, H, KV, d, P, C = 8, 8, 4, 64, 16, 16
+    S = C * P
+    dtype_bytes = 2  # bf16 serving pools on TPU
+    rows = []
+    for name, T in (("decode_attention", 1), ("decode_attention_multi(k=4)", 5)):
+        flops = 4 * B * T * H * d * S          # qk^T + p@v
+        kv_bytes = 2 * B * S * KV * d * dtype_bytes   # k + v pages, read once
+        io_bytes = 2 * B * T * H * d * dtype_bytes    # q in + out
+        byts = kv_bytes + io_bytes
+        compute_s = flops / PEAK_FLOPS
+        memory_s = byts / HBM_BW
+        rows.append({
+            "kernel": name,
+            "shape": f"B{B} T{T} H{H} KV{KV} d{d} ctx{S}",
+            "flops": flops,
+            "bytes": byts,
+            "intensity": flops / byts,
+            "compute_us": compute_s * 1e6,
+            "memory_us": memory_s * 1e6,
+            "bottleneck": "memory" if memory_s > compute_s else "compute",
+            "bytes_per_token": byts / (B * T),
+        })
+    return rows
+
+
+def kernel_markdown(rows: List[Dict]) -> str:
+    hdr = (
+        "| kernel | shape | FLOPs/byte | compute (µs) | memory (µs) | "
+        "bound | HBM bytes/token |\n|---|---|---|---|---|---|---|\n"
+    )
+    lines = [
+        f"| {r['kernel']} | {r['shape']} | {r['intensity']:.1f} | "
+        f"{r['compute_us']:.2f} | {r['memory_us']:.2f} | {r['bottleneck']} | "
+        f"{r['bytes_per_token']:.0f} |"
+        for r in rows
+    ]
+    single = next(r for r in rows if r["kernel"] == "decode_attention")
+    multi = next(r for r in rows if "multi" in r["kernel"])
+    ratio = single["bytes_per_token"] / multi["bytes_per_token"]
+    return (
+        hdr + "\n".join(lines)
+        + f"\n\nBoth kernels are memory-bound at decode shapes; the k-token "
+        f"verify amortizes the KV page reads over its chunk, cutting HBM "
+        f"bytes/token {ratio:.1f}x — the bandwidth headroom speculative "
+        f"decoding converts into accepted tokens.\n"
+    )
+
+
 def run():
     import time
     t0 = time.time()
     rows = load_table()
-    if not rows:
-        print("roofline,0,no-dryrun-artifacts-found")
-        return []
+    krows = serving_kernel_rows()
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/roofline.md", "w") as f:
-        f.write(markdown_table(rows) + "\n")
-        cmp_table = baseline_vs_optimized()
-        if cmp_table:
-            f.write("\n## baseline (v0) vs optimized defaults (v1)\n\n")
-            f.write(cmp_table + "\n")
+        if rows:
+            f.write(markdown_table(rows) + "\n")
+            cmp_table = baseline_vs_optimized()
+            if cmp_table:
+                f.write("\n## baseline (v0) vs optimized defaults (v1)\n\n")
+                f.write(cmp_table + "\n")
+        f.write("\n## serving decode-attention kernels (analytic, TPU v5e)\n\n")
+        f.write(kernel_markdown(krows))
     with open("experiments/roofline.json", "w") as f:
-        json.dump(rows, f, indent=2)
+        json.dump({"cells": rows, "serving_kernels": krows}, f, indent=2)
+    if not rows:
+        print(f"roofline,{(time.time()-t0)*1e6:.0f},"
+              f"no-dryrun-artifacts;serving_kernels={len(krows)}")
+        return rows
     worst = min(rows, key=lambda r: r["roofline_frac"])
     best = max(rows, key=lambda r: r["roofline_frac"])
     coll_bound = [r for r in rows if r["bottleneck"] == "collective"]
     derived = (
         f"cells={len(rows)};best={best['arch']}/{best['shape']}@"
         f"{best['roofline_frac']:.2%};worst={worst['arch']}/{worst['shape']}@"
-        f"{worst['roofline_frac']:.2%};collective_bound={len(coll_bound)}"
+        f"{worst['roofline_frac']:.2%};collective_bound={len(coll_bound)};"
+        f"serving_kernels={len(krows)}"
     )
     print(f"roofline,{(time.time()-t0)*1e6:.0f},{derived}")
     return rows

@@ -1,11 +1,16 @@
 """Benchmark harness entry: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV lines.  Run with:
+Prints ``name,us_per_call,derived`` CSV lines.  Benches whose ``run()``
+returns a metrics dict additionally get it written to
+``experiments/BENCH_<name>.json`` (``perf_`` prefix stripped — e.g.
+perf_serve -> BENCH_serve.json) for machine consumption.  Run with:
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import traceback
 
@@ -44,7 +49,12 @@ def main() -> None:
         if args.only and args.only != name:
             continue
         try:
-            mod.run()
+            result = mod.run()
+            if isinstance(result, dict):
+                os.makedirs("experiments", exist_ok=True)
+                short = name[5:] if name.startswith("perf_") else name
+                with open(f"experiments/BENCH_{short}.json", "w") as f:
+                    json.dump(result, f, indent=2)
         except Exception:
             failures += 1
             print(f"{name},0,FAILED", flush=True)

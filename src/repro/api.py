@@ -130,6 +130,36 @@ class Experiment:
         )
 
     # ------------------------------------------------------------------
+    def serving_engine(
+        self,
+        engine_config=None,
+        drafter: Optional["Experiment"] = None,
+        **ecfg_overrides,
+    ):
+        """A continuous-batching serving engine for this experiment's model.
+
+        Pass ``drafter`` — typically ``self.proxy(width_factor, ...)``, the
+        same narrow µP proxy used for HP tuning — to enable lossless
+        speculative decoding: the proxy shares the target's µP base shape,
+        so µTransfer makes the draft model free (set ``draft_k`` via
+        ``engine_config`` or the overrides; it defaults to 4 when a drafter
+        is given).  Returns the Engine; call ``engine.serve(params, ...,
+        draft_params=...)`` with each model's own params.
+        """
+        from repro.serving.engine import Engine, EngineConfig  # lazy import
+
+        if engine_config is None:
+            if drafter is not None:
+                ecfg_overrides.setdefault("draft_k", 4)
+            engine_config = EngineConfig(**ecfg_overrides)
+        elif ecfg_overrides:
+            engine_config = dataclasses.replace(
+                engine_config, **ecfg_overrides
+            )
+        draft_model = None if drafter is None else drafter.build()
+        return Engine(self.build(), engine_config, draft_model=draft_model)
+
+    # ------------------------------------------------------------------
     def coord_check(
         self,
         widths: Sequence[float] = (1.0, 2.0, 4.0),

@@ -168,7 +168,10 @@ class ModelConfig:
         d_model = r(self.d_model)
         d_head = max(r(self.d_head), min_d_head)
         n_heads = max(d_model // d_head, 1)
+        # GQA needs n_kv | n_heads; shrink to the nearest divisor
         n_kv = max(min(self.n_kv_heads, n_heads), 1)
+        while n_heads % n_kv:
+            n_kv -= 1
         return self.replace(
             d_model=d_model,
             d_ff=r(self.d_ff),

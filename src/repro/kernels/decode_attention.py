@@ -102,6 +102,80 @@ def _decode_kernel(
         o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
 
 
+def _decode_multi_kernel(
+    tab_ref,      # scalar-prefetch: (B, C) int32 page table
+    qpos_ref,     # scalar-prefetch: (B, T) int32 per-query positions
+    q_ref,        # (1, 1, T, G, d)
+    k_ref,        # (1, P, 1, d) — page picked by the index map via tab_ref
+    v_ref,        # (1, P, 1, d)
+    pos_ref,      # (1, P) int32 stored token positions of the page
+    o_ref,        # (1, 1, T, G, d)
+    acc_ref, m_ref, l_ref,
+    *, scale: float, window: int, softcap: float,
+    page: int, n_pages_per_slot: int,
+):
+    """Multi-query (T > 1) variant of _decode_kernel for speculative verify.
+
+    Identical grid and page streaming; the online-softmax state carries
+    (T, G) rows instead of (G,), and the per-page visibility mask is applied
+    per query row from its own position tag (so the chunk's internal
+    causality comes for free — chunk entries carry their positions in the
+    page pool by the time the kernel runs).
+    """
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    qp = qpos_ref[b]                                       # (T,)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # live pages are bounded by the *latest* query in the chunk; earlier
+    # queries see a subset via their own position mask.
+    qp_max = jnp.max(qp)
+    n_live = jnp.minimum(n_pages_per_slot, qp_max // page + 1)
+    needed = jnp.logical_and(qp_max >= 0, j < n_live)
+
+    @pl.when(needed)
+    def _compute():
+        T, G, d = q_ref.shape[2:]
+        q = q_ref[0, 0].astype(jnp.float32).reshape(T * G, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (P, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # (P, d)
+        pos = pos_ref[0, :]                                # (P,)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        mask_t = jnp.logical_and(
+            pos[None, :] >= 0, pos[None, :] <= qp[:, None]
+        )                                                  # (T, P)
+        if window:
+            mask_t = jnp.logical_and(mask_t, (qp[:, None] - pos[None, :]) < window)
+        mask = jnp.broadcast_to(mask_t[:, None, :], (T, G, pos.shape[0]))
+        mask = mask.reshape(T * G, -1)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # (T*G, 1)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pages_per_slot - 1)
+    def _finalize():
+        T, G, d = o_ref.shape[2:]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.reshape(T, G, d).astype(o_ref.dtype)
+
+
 def flash_decode(
     q: jax.Array,            # (B, H, d) — one query per slot
     k_pages: jax.Array,      # (N, P, K, d) paged pool
@@ -163,3 +237,72 @@ def flash_decode(
         interpret=interpret,
     )(tab, qp, qg, k_pages, v_pages, pos_pages)
     return out.reshape(B, H, d)
+
+
+def flash_decode_multi(
+    q: jax.Array,            # (B, T, H, d) — T queries per slot
+    k_pages: jax.Array,      # (N, P, K, d) paged pool
+    v_pages: jax.Array,      # (N, P, K, d)
+    pos_pages: jax.Array,    # (N, P) int32; -1 = empty
+    page_table: jax.Array,   # (B, C) int32 page ids
+    q_pos: jax.Array,        # (B, T) int32; -1 rows -> zeros out
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float = 0.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged multi-query flash attention (speculative verify / drafter
+    catch-up); returns (B, T, H, d).
+
+    The T-token chunk must already be written into the pages (the engine
+    writes before attending), so per-row position masking gives both the
+    history visibility and the chunk's internal causality.
+    """
+    B, T, H, d = q.shape
+    N, P, K, _ = k_pages.shape
+    C = page_table.shape[1]
+    assert H % K == 0, (H, K)
+    G = H // K
+    # (B, K, T, G, d): all T queries of one kv head in a single program so
+    # K/V pages stream once per (slot, kv head), same as the T=1 kernel.
+    qg = q.reshape(B, T, K, G, d).transpose(0, 2, 1, 3, 4)
+    tab = jnp.clip(page_table, 0, N - 1).astype(jnp.int32)
+    qp = q_pos.astype(jnp.int32)
+
+    kernel = functools.partial(
+        _decode_multi_kernel,
+        scale=scale, window=window, softcap=softcap,
+        page=P, n_pages_per_slot=C,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, K, C),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, T, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
+            ),
+            pl.BlockSpec(
+                (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
+            ),
+            pl.BlockSpec((1, P), lambda b, kh, j, tab, qp: (tab[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, T, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((T * G, d), jnp.float32),   # acc
+            pltpu.VMEM((T * G, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((T * G, 1), jnp.float32),   # l (running denom)
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, T, G, d), q.dtype),
+        interpret=interpret,
+    )(tab, qp, qg, k_pages, v_pages, pos_pages)
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, T, H, d)

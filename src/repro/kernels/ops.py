@@ -170,6 +170,47 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# decode attention (paged, multi-query: speculative verify / drafter catch-up)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "impl"))
+def _decode_attention_multi_jit(
+    q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
+    *, window, softcap, impl,
+):
+    if impl == "ref":
+        return ref.decode_attention_multi_ref(
+            q, k_pages, v_pages, pos_pages, page_table, q_pos,
+            scale=scale, window=window, softcap=softcap,
+        )
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    return da.flash_decode_multi(
+        qs, k_pages, v_pages, pos_pages, page_table, q_pos,
+        scale=1.0, window=window, softcap=softcap,
+        interpret=(impl == "interpret"),
+    )
+
+
+def decode_attention_multi(
+    q, k_pages, v_pages, pos_pages, page_table, q_pos, *, scale,
+    window: int = 0, softcap: float = 0.0, impl: str = "auto",
+):
+    """Multi-query flash-decode: a T-token chunk per slot attends over the
+    paged KV cache (speculative-decoding verify and drafter catch-up).
+
+    ``q`` (B, T, H, d), pools (N, P, K, d) + (N, P) stored positions,
+    ``page_table`` (B, C), ``q_pos`` (B, T) per-query positions (-1 rows ->
+    zeros).  The chunk must already be written into the pages; per-row
+    position masking then yields history visibility and intra-chunk
+    causality.  Pages are whole-block fetches — every shape tiles.
+    """
+    return _decode_attention_multi_jit(
+        q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
+        window=window, softcap=softcap, impl=_resolve_impl(impl),
+    )
+
+
+# ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------
 

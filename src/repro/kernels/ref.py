@@ -87,6 +87,51 @@ def decode_attention_ref(
     return out.reshape(B, H, d).astype(q.dtype)
 
 
+def decode_attention_multi_ref(
+    q: jax.Array,            # (B, T, H, d) — T queries per decode slot
+    k_pages: jax.Array,      # (N, P, K, d) — paged KV pool
+    v_pages: jax.Array,      # (N, P, K, d)
+    pos_pages: jax.Array,    # (N, P) int32 token positions; -1 = empty
+    page_table: jax.Array,   # (B, C) int32 page ids per slot
+    q_pos: jax.Array,        # (B, T) int32 per-query positions; -1 = masked
+    *,
+    scale,
+    window: int = 0,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Multi-query paged attention (the speculative verify/catch-up oracle).
+
+    Same visibility contract as decode_attention_ref, applied per query row:
+    entry visible to query t iff pos >= 0, pos <= q_pos[:, t] and (windowed)
+    q_pos[:, t] - pos < window.  Rows with q_pos = -1 (inactive slots, or
+    leading context positions before the start of a short prompt) return
+    exact zeros.  Causality *within* the new chunk is handled by the same
+    rule, because the engine writes the chunk into the pages before
+    attending: a chunk entry at position p is visible only to chunk queries
+    at positions >= p.
+    """
+    B, T, H, d = q.shape
+    N, P, K, _ = k_pages.shape
+    C = page_table.shape[1]
+    G = H // K
+    tab = jnp.clip(page_table, 0, N - 1)
+    k = k_pages[tab].reshape(B, C * P, K, d).astype(jnp.float32)
+    v = v_pages[tab].reshape(B, C * P, K, d).astype(jnp.float32)
+    pos = pos_pages[tab].reshape(B, C * P)
+    mask = (pos[:, None, :] >= 0) & (pos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        mask &= (q_pos[:, :, None] - pos[:, None, :]) < window
+    qg = q.reshape(B, T, K, G, d).astype(jnp.float32)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg, k) * scale
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(mask[:, None, None], p, 0.0)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v)
+    return out.reshape(B, T, H, d).astype(q.dtype)
+
+
 def rmsnorm_ref(x: jax.Array, gain: jax.Array, eps: float = 1e-6) -> jax.Array:
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)

@@ -131,6 +131,15 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--eos", type=int, default=None,
                     help="stop token id (default: config's eos_token_id)")
+    ap.add_argument("--draft-width", type=float, default=0.0,
+                    help="speculative decoding: drafter width as a fraction "
+                         "of the target (builds the µP proxy via "
+                         "cfg.scaled; 0 disables speculation)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative draft length per verify (with "
+                         "--draft-width)")
+    ap.add_argument("--draft-min-d-head", type=int, default=8,
+                    help="d_head floor for the drafter proxy")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--dense", action="store_true",
                     help="force the dense per-token-loop driver")
@@ -169,6 +178,20 @@ def main(argv=None):
                 jax.random.PRNGKey(args.seed + 2), (R,), max(1, P // 4), P + 1
             )
 
+    speculate = use_engine and args.draft_width > 0
+    draft_model = draft_params = None
+    if args.draft_width > 0 and not use_engine:
+        print("[serve] --draft-width ignored: speculation needs the paged "
+              "engine")
+    if speculate:
+        # the µTransfer story: the narrow proxy shares the target's µP base
+        # shape, so it is a distribution-matched drafter by construction
+        dcfg = cfg.scaled(args.draft_width, min_d_head=args.draft_min_d_head)
+        draft_model = build_model(dcfg)
+        draft_params = draft_model.init(jax.random.PRNGKey(args.seed + 7))
+        print(f"[serve] drafter {dcfg.name}: d_model {dcfg.d_model}, "
+              f"{dcfg.n_heads} heads, draft_k={args.draft_k}")
+
     t0 = time.time()
     with sharding_ctx(mesh, rules):
         if use_engine:
@@ -176,7 +199,8 @@ def main(argv=None):
                 n_slots=args.slots, page_size=args.page_size,
                 max_prompt_len=P, max_gen_len=args.gen_len,
                 eos_token_id=args.eos,
-            ))
+                draft_k=args.draft_k if speculate else 0,
+            ), draft_model=draft_model)
             print(f"[serve] paged KV pools: {pool_bytes(cfg, engine.spec)/2**20:.1f} MiB "
                   f"({engine.spec.n_slots} slots x {engine.spec.gp_cols} global"
                   + (f" + {engine.spec.wp_cols} ring" if engine.spec.wp_cols else "")
@@ -187,9 +211,15 @@ def main(argv=None):
                 top_k=jnp.full((R,), args.top_k, jnp.int32),
                 top_p=jnp.full((R,), args.top_p),
                 seed=args.seed,
+                draft_params=draft_params,
             )
             toks, n_tok = out["tokens"], int(out["lengths"].sum())
             jax.block_until_ready(toks)
+            if speculate:
+                prop = max(1, int(out["proposed"]))
+                print(f"[serve] speculation: {int(out['accepted'])}/{prop} "
+                      f"drafts accepted ({int(out['accepted'])/prop:.1%}) "
+                      f"over {int(out['steps'])} engine iterations")
         else:
             if args.top_k or args.top_p < 1.0:
                 print("[serve] --top-k/--top-p ignored: the dense driver "

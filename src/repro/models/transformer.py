@@ -242,12 +242,21 @@ def _self_attention(
         )
         # flash-decode Pallas kernel via the ops dispatcher (ref on CPU,
         # interpret under REPRO_KERNELS=interpret); scale may be traced —
-        # ops folds it into q.
-        out = ops_lib.decode_attention(
-            q[:, 0], new_cache["k"], new_cache["v"], new_cache["pos"],
-            table, ctx.positions[:, 0], scale=scale, window=window,
-            softcap=cfg.attn_softcap,
-        )[:, None]
+        # ops folds it into q.  S > 1 is the speculative verify chunk /
+        # drafter catch-up: the chunk was just written into the pages above,
+        # so per-row position masking gives intra-chunk causality too.
+        if S == 1:
+            out = ops_lib.decode_attention(
+                q[:, 0], new_cache["k"], new_cache["v"], new_cache["pos"],
+                table, ctx.positions[:, 0], scale=scale, window=window,
+                softcap=cfg.attn_softcap,
+            )[:, None]
+        else:
+            out = ops_lib.decode_attention_multi(
+                q, new_cache["k"], new_cache["v"], new_cache["pos"],
+                table, ctx.positions, scale=scale, window=window,
+                softcap=cfg.attn_softcap,
+            )
     else:  # decode, dense position-tagged cache
         new_cache = attn_lib.cache_write(cache, k, v, ctx.positions, bool(window))
         kk, vv = new_cache["k"], new_cache["v"]

@@ -21,11 +21,37 @@ retirement — inside a single ``jax.lax.while_loop`` under one ``jax.jit``:
   - Decode is one (n_slots, 1) forward over the paged block pool — the
     flash-decode Pallas kernel (kernels/decode_attention.py) on TPU.
   - Sampling is serving/sampling.py: greedy/temperature/top-k/top-p as
-    traced per-slot params, keys folded from (seed, step, slot).
+    traced per-slot params.  PRNG keys are folded from the *(request,
+    absolute position)* of each sampling event — never from the loop
+    iteration.  Slots advance at different rates (speculation commits a
+    variable number of tokens per iteration; admission timing depends on
+    other requests' lengths), so iteration-folded keys would both correlate
+    draws across slots and make a request's stream depend on when it was
+    admitted.  Position-folded keys make every request's sample stream a
+    pure function of (seed, request, position).
+
+Speculative decoding (``EngineConfig.draft_k`` + a drafter model — in this
+repo the natural drafter is the request model's narrow µP proxy, see
+repro/api.py): each loop iteration drafts k tokens autoregressively on the
+drafter, verifies them with ONE (k+1)-token multi-query target forward
+(kernels/ops.decode_attention_multi — shaped like a k-token chunked prefill
+against the paged cache), and commits via standard rejection sampling
+(serving/sampling.spec_accept), so the output distribution is exactly the
+target's — token-for-token identical under greedy.  Rollback is implicit:
+rejected drafts leave stale KV entries *ahead* of the committed position,
+and every such position is rewritten by the next iteration's chunk before
+any committed query can see it (position tags mask entries beyond each
+query's own position, and chunk writes always cover [pos, pos + k]).  The
+drafter keeps its own slot-mapped page pools; its per-iteration catch-up
+forward (a (k+1)-token chunk over the last committed tokens) repairs the
+draft-cache holes left by whatever the target rejected.  The whole
+draft -> verify -> accept cycle stays inside the same while_loop under the
+same single jit: zero per-token Python, trace-stable cache.
 
 Throughput-wise the win is structural: the host loop pays dispatch latency
-per token; here XLA sees the whole generation as one program
-(benchmarks/perf_serve.py measures the dense-loop vs engine gap).
+per token; here XLA sees the whole generation as one program, and
+speculation collapses ~(1 + accepted) target tokens into one target forward
+(benchmarks/perf_serve.py measures both gaps).
 """
 from __future__ import annotations
 
@@ -38,6 +64,11 @@ import jax.numpy as jnp
 from repro.distributed.sharding import shard
 from repro.serving import kv_cache, sampling
 
+# PRNG event tags: one stream per (request, position, event kind)
+_TAG_SAMPLE = 0   # committed-token sampling (direct, residual resample, bonus)
+_TAG_ACCEPT = 1   # speculative accept/reject uniform draw
+_TAG_DRAFT = 2    # drafter proposal draw
+
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
@@ -46,6 +77,7 @@ class EngineConfig:
     max_prompt_len: int = 64     # prompt buffer length (prompts right-padded)
     max_gen_len: int = 16        # per-request generation budget
     eos_token_id: Optional[int] = None   # None -> model config's knob
+    draft_k: int = 0             # speculative draft length; 0 = off
 
 
 class Engine:
@@ -53,25 +85,51 @@ class Engine:
 
     One Engine instance owns one compiled program per (n_requests,) queue
     shape; all request *content* (prompts, lengths, sampling params, seed)
-    is traced data.
+    is traced data.  Pass ``draft_model`` (same vocab; typically the µP
+    proxy of the target) with ``ecfg.draft_k >= 1`` to enable lossless
+    speculative decoding.
     """
 
-    def __init__(self, model, ecfg: EngineConfig = EngineConfig()):
+    def __init__(self, model, ecfg: EngineConfig = EngineConfig(),
+                 draft_model=None):
         kv_cache.check_servable(model.cfg)
         if min(ecfg.n_slots, ecfg.page_size, ecfg.max_prompt_len,
                ecfg.max_gen_len) < 1:
             raise ValueError(f"engine dimensions must be >= 1, got {ecfg}")
+        if (ecfg.draft_k > 0) != (draft_model is not None):
+            raise ValueError(
+                "speculative decoding needs both draft_k >= 1 and a "
+                f"draft_model (got draft_k={ecfg.draft_k}, "
+                f"draft_model={'set' if draft_model is not None else 'None'})"
+            )
         self.model = model
+        self.draft_model = draft_model
         self.ecfg = ecfg
         eos = ecfg.eos_token_id
         if eos is None:
             eos = model.cfg.eos_token_id
         self.eos = int(eos)
+        max_total = ecfg.max_prompt_len + ecfg.max_gen_len
+        # lookahead: speculative chunks write up to draft_k positions ahead
+        # of the earliest query in the same forward — the windowed ring must
+        # cover window + k before wrapping (see kv_cache.build_spec).
         self.spec = kv_cache.build_spec(
-            model.cfg, ecfg.n_slots,
-            ecfg.max_prompt_len + ecfg.max_gen_len, ecfg.page_size,
+            model.cfg, ecfg.n_slots, max_total, ecfg.page_size,
+            lookahead=ecfg.draft_k,
         )
         self.gtable, self.wtable = kv_cache.make_tables(self.spec)
+        if draft_model is not None:
+            kv_cache.check_servable(draft_model.cfg)
+            if draft_model.cfg.vocab_size != model.cfg.vocab_size:
+                raise ValueError(
+                    "drafter vocab must match the target "
+                    f"({draft_model.cfg.vocab_size} != {model.cfg.vocab_size})"
+                )
+            self.dspec = kv_cache.build_spec(
+                draft_model.cfg, ecfg.n_slots, max_total, ecfg.page_size,
+                lookahead=ecfg.draft_k,
+            )
+            self.dgtable, self.dwtable = kv_cache.make_tables(self.dspec)
         self._serve = jax.jit(self._run)
 
     # ------------------------------------------------------------------
@@ -91,10 +149,15 @@ class Engine:
         top_k=None,               # (R,) int32;  <= 0 -> off
         top_p=None,               # (R,) float32; >= 1 -> off
         seed: int = 0,
+        draft_params=None,        # drafter params (speculative engines only)
     ) -> Dict[str, jax.Array]:
         """Serve R requests; returns {"tokens": (R, max_gen_len) int32,
-        "lengths": (R,) int32, "steps": () int32 loop-iteration count}
-        (generated tokens incl. the EOS, if hit)."""
+        "lengths": (R,) int32, "steps": () int32 loop-iteration count,
+        "accepted": () int32, "proposed": () int32} (generated tokens incl.
+        the EOS, if hit; accepted/proposed count speculative drafts and stay
+        0 for non-speculative engines)."""
+        if (self.draft_model is not None) and draft_params is None:
+            raise ValueError("speculative engine: serve() needs draft_params")
         prompts = jnp.asarray(prompts, jnp.int32)
         prompt_lens = jnp.asarray(prompt_lens, jnp.int32)
         R, L = prompts.shape
@@ -115,7 +178,7 @@ class Engine:
             "top_p": p0 if top_p is None else jnp.asarray(top_p, jnp.float32),
             "seed": jnp.asarray(seed, jnp.int32),
         }
-        return self._serve(params, queue)
+        return self._serve(params, draft_params, queue)
 
     # ------------------------------------------------------------------
     def _is_eos(self, tok: jax.Array) -> jax.Array:
@@ -123,10 +186,21 @@ class Engine:
             return jnp.zeros_like(tok, bool)
         return tok == self.eos
 
-    def _run(self, params, queue: Dict[str, Any]) -> Dict[str, jax.Array]:
+    @staticmethod
+    def _event_key(base_key, pos, req, tag):
+        """PRNG key of one sampling event: folded from the event's absolute
+        input position and owning request — invariant to admission timing,
+        loop iteration, slot assignment and (under speculation) how many
+        drafts earlier iterations accepted."""
+        k = jax.random.fold_in(base_key, pos)
+        k = jax.random.fold_in(k, req)
+        return jax.random.fold_in(k, jnp.int32(tag))
+
+    def _run(self, params, draft_params, queue: Dict[str, Any]):
         model, cfg, spec = self.model, self.model.cfg, self.spec
         S = spec.n_slots
         Pmax, Gmax = self.ecfg.max_prompt_len, self.ecfg.max_gen_len
+        dk = self.ecfg.draft_k
         R = queue["prompts"].shape[0]
         base_key = jax.random.PRNGKey(queue["seed"])
         # ≤ R admissions + ≤ R*Gmax token steps; the counter is a backstop
@@ -143,14 +217,33 @@ class Engine:
             "slot_ntok": jnp.zeros((S,), jnp.int32),  # tokens emitted
             "out_toks": jnp.zeros((R, Gmax), jnp.int32),
             "out_len": jnp.zeros((R,), jnp.int32),
+            "accepted": jnp.int32(0),                 # spec drafts accepted
+            "proposed": jnp.int32(0),                 # spec drafts proposed
             "pools": kv_cache.init_pools(cfg, spec),
         }
+        if self.draft_model is not None:
+            state["dpools"] = kv_cache.init_pools(
+                self.draft_model.cfg, self.dspec
+            )
+            # last dk+1 committed tokens per slot, ending at slot_pos — the
+            # drafter's catch-up chunk (covers every cache hole a rejection
+            # can leave, since one iteration commits at most dk+1 tokens)
+            state["slot_ctx"] = jnp.zeros((S, dk + 1), jnp.int32)
 
         def req_params(req):
             r = jnp.maximum(req, 0)
             return (
                 queue["temperature"][r], queue["top_k"][r], queue["top_p"][r]
             )
+
+        def event_keys(positions, req, tag):
+            """Keys for a (S,) or (S, T) grid of event positions."""
+            one = lambda p, r: self._event_key(base_key, p, r, tag)
+            if positions.ndim == 1:
+                return jax.vmap(one)(positions, req)
+            return jax.vmap(
+                lambda ps, r: jax.vmap(lambda p: one(p, r))(ps)
+            )(positions, req)
 
         # -------------------------- admission --------------------------
         def admit(st):
@@ -172,16 +265,14 @@ class Engine:
             pools = kv_cache.admit_slot(
                 st["pools"], pcache, cfg, spec, self.gtable[slot], wrow, plen
             )
-            # slot index S is never used by decode's per-slot fold_ins
-            key = jax.random.fold_in(
-                jax.random.fold_in(base_key, st["step"]), jnp.int32(S)
-            )
-            t, k, p = req_params(req)
+            # first generated token: the event at input position plen - 1
+            key = self._event_key(base_key, plen - 1, req, _TAG_SAMPLE)
+            t, tk, tp = req_params(req)
             tok = sampling.sample(
-                last[None], t[None], k[None], p[None], key[None]
+                last[None], t[None], tk[None], tp[None], key[None]
             )[0]
             finished = self._is_eos(tok) | (Gmax <= 1)
-            return {
+            st = {
                 **st,
                 "next_req": req + 1,
                 "active": st["active"].at[slot].set(~finished),
@@ -192,6 +283,31 @@ class Engine:
                 "out_toks": st["out_toks"].at[req, 0].set(tok),
                 "out_len": st["out_len"].at[req].set(1),
                 "pools": pools,
+            }
+            if self.draft_model is None:
+                return st
+            # drafter admission: prefill the same prompt into the drafter's
+            # own pools, and seed the catch-up context with the last dk
+            # prompt tokens + the freshly sampled one (clipped gathers for
+            # plen <= dk are harmless: those entries sit at positions < 0
+            # in the catch-up chunk and are masked + scatter-dropped).
+            _, dpcache = self.draft_model.forward(
+                draft_params, prompt[None], positions=positions,
+                mode="prefill", cache_len=Pmax, full_cache=True,
+            )
+            dwrow = None if self.dwtable is None else self.dwtable[slot]
+            dpools = kv_cache.admit_slot(
+                st["dpools"], dpcache, self.draft_model.cfg, self.dspec,
+                self.dgtable[slot], dwrow, plen,
+            )
+            gidx = plen - dk + jnp.arange(dk, dtype=jnp.int32)
+            ctx_row = jnp.concatenate(
+                [prompt[jnp.clip(gidx, 0, Pmax - 1)], tok[None]]
+            )
+            return {
+                **st,
+                "dpools": dpools,
+                "slot_ctx": st["slot_ctx"].at[slot].set(ctx_row),
             }
 
         # --------------------------- decode ----------------------------
@@ -210,12 +326,11 @@ class Engine:
                 params, toks, positions=positions, mode="decode",
                 cache=st["pools"], paged=paged,
             )
-            t, k, p = req_params(st["slot_req"])
-            step_key = jax.random.fold_in(base_key, st["step"])
-            keys = jax.vmap(lambda s: jax.random.fold_in(step_key, s))(
-                jnp.arange(S)
+            t, tk, tp = req_params(st["slot_req"])
+            keys = event_keys(st["slot_pos"], st["slot_req"], _TAG_SAMPLE)
+            tok = sampling.sample(
+                shard(logits[:, 0], "slots", "vocab"), t, tk, tp, keys
             )
-            tok = sampling.sample(shard(logits[:, 0], "slots", "vocab"), t, k, p, keys)
             # inactive slots write to row R — out of bounds, dropped
             wr = jnp.where(active, st["slot_req"], R)
             out_toks = st["out_toks"].at[wr, st["slot_ntok"]].set(tok)
@@ -233,15 +348,143 @@ class Engine:
                 "pools": pools,
             }
 
+        # ------------------- speculative decode ------------------------
+        def decode_spec(st):
+            active = st["active"]
+            pos = st["slot_pos"]
+            req = st["slot_req"]
+            t, tk, tp = req_params(req)
+            joff = jnp.arange(dk + 1, dtype=jnp.int32)
+            dpaged = kv_cache.PagedState(
+                global_table=self.dgtable, window_table=self.dwtable,
+                active=active, page_size=self.dspec.page_size,
+            )
+
+            # --- draft: catch-up chunk, then dk - 1 more single steps ---
+            # The catch-up (dk+1)-token forward re-feeds the last committed
+            # tokens: it simultaneously repairs drafter-cache holes from the
+            # previous rejection and yields the logits for the first draft.
+            cpos = pos[:, None] - dk + joff[None]
+            cpos = jnp.where(active[:, None] & (cpos >= 0), cpos, -1)
+            dlogits, dpools = self.draft_model.forward(
+                draft_params, shard(st["slot_ctx"], "slots", None),
+                positions=cpos, mode="decode", cache=st["dpools"],
+                paged=dpaged,
+            )
+
+            def draft_step(carry, j):
+                logits, dpools = carry          # (S, V) at input pos + j
+                qj = sampling.filtered_dist(logits, t, tk, tp)
+                dkeys = event_keys(pos + j, req, _TAG_DRAFT)
+                dj = sampling._categorical_from(dkeys, qj)
+                # feed the draft back (writes drafter KV at pos + 1 + j);
+                # the last feed's logits go unused but keep the scan body
+                # uniform, and its cache entry saves next iteration's
+                # catch-up from a hole when everything is accepted.
+                dposj = jnp.where(active, pos + 1 + j, -1)[:, None]
+                nlog, dpools = self.draft_model.forward(
+                    draft_params, shard(dj[:, None], "slots", None),
+                    positions=dposj, mode="decode", cache=dpools,
+                    paged=dpaged,
+                )
+                return (nlog[:, 0], dpools), (dj, qj)
+
+            (_, dpools), (drafts_j, q_j) = jax.lax.scan(
+                draft_step, (dlogits[:, -1], dpools),
+                jnp.arange(dk, dtype=jnp.int32),
+            )
+            drafts = drafts_j.T                  # (S, dk)
+            q_dist = jnp.moveaxis(q_j, 0, 1)     # (S, dk, V)
+
+            # --- verify: ONE (dk+1)-token target forward ---
+            # [y_pos, d_0 .. d_{dk-1}] at positions pos .. pos+dk; logits
+            # row i is the target's filtered dist for the token at
+            # pos + 1 + i.  The chunk write doubles as rollback: it lands
+            # exactly on whatever stale entries the last rejection left.
+            tokens_v = jnp.concatenate(
+                [st["slot_last"][:, None], drafts], axis=1
+            )
+            vpos = jnp.where(active[:, None], pos[:, None] + joff[None], -1)
+            paged = kv_cache.PagedState(
+                global_table=self.gtable, window_table=self.wtable,
+                active=active, page_size=spec.page_size,
+            )
+            vlogits, pools = model.forward(
+                params, shard(tokens_v, "slots", None), positions=vpos,
+                mode="decode", cache=st["pools"], paged=paged,
+            )
+            V = vlogits.shape[-1]
+            rep = lambda a: jnp.repeat(a, dk + 1, axis=0)
+            p_dist = sampling.filtered_dist(
+                vlogits.reshape(S * (dk + 1), V), rep(t), rep(tk), rep(tp)
+            ).reshape(S, dk + 1, V)
+
+            # --- accept / resample (rejection sampling) ---
+            akeys = event_keys(pos[:, None] + joff[None, :dk], req, _TAG_ACCEPT)
+            skeys = event_keys(pos[:, None] + joff[None], req, _TAG_SAMPLE)
+            n_acc, extra = sampling.spec_accept(
+                p_dist, q_dist, drafts, akeys, skeys
+            )
+            n_acc = jnp.where(active, n_acc, 0)
+
+            # commit chunk: accepted drafts + the resampled/bonus token,
+            # truncated at the first committed EOS and the length budget
+            cand = jnp.concatenate(
+                [drafts, jnp.zeros((S, 1), jnp.int32)], axis=1
+            )
+            cand = jnp.where(joff[None] == n_acc[:, None], extra[:, None], cand)
+            m_raw = n_acc + 1
+            in_commit = self._is_eos(cand) & (joff[None] < m_raw[:, None])
+            any_eos = jnp.any(in_commit, axis=1)
+            first_eos = jnp.argmax(in_commit, axis=1)
+            m_eos = jnp.where(any_eos, first_eos + 1, m_raw)
+            room = Gmax - st["slot_ntok"]
+            m = jnp.where(active, jnp.minimum(m_eos, room), 0)
+
+            wr = jnp.where(active, req, R)
+            commit = joff[None] < m[:, None]
+            col = jnp.where(commit, st["slot_ntok"][:, None] + joff[None], Gmax)
+            out_toks = st["out_toks"].at[wr[:, None], col].set(cand)
+            ntok = st["slot_ntok"] + m
+            out_len = st["out_len"].at[wr].set(ntok)
+            finished = (any_eos & (first_eos < m)) | (ntok >= Gmax)
+            last_tok = jnp.take_along_axis(
+                cand, jnp.maximum(m - 1, 0)[:, None], axis=1
+            )[:, 0]
+            # slide the catch-up context by the commit length
+            full_ctx = jnp.concatenate([st["slot_ctx"], cand], axis=1)
+            new_ctx = jnp.take_along_axis(
+                full_ctx, m[:, None] + joff[None], axis=1
+            )
+            upd = active & (m > 0)
+            return {
+                **st,
+                "active": active & ~finished,
+                "slot_pos": pos + m,
+                "slot_last": jnp.where(upd, last_tok, st["slot_last"]),
+                "slot_ntok": jnp.where(active, ntok, st["slot_ntok"]),
+                "slot_ctx": jnp.where(upd[:, None], new_ctx, st["slot_ctx"]),
+                "out_toks": out_toks,
+                "out_len": out_len,
+                "pools": pools,
+                "dpools": dpools,
+                "accepted": st["accepted"]
+                + jnp.sum(jnp.where(active, n_acc, 0)),
+                "proposed": st["proposed"]
+                + jnp.sum(jnp.where(active, dk, 0)),
+            }
+
         # ------------------------- the one loop -------------------------
         def cond(st):
             pending = st["next_req"] < R
             return (pending | jnp.any(st["active"])) & (st["step"] < max_steps)
 
+        step_fn = decode_spec if self.draft_model is not None else decode
+
         def body(st):
             can_admit = (st["next_req"] < R) & ~jnp.all(st["active"])
             st = jax.lax.cond(can_admit, admit, lambda s: s, st)
-            st = decode(st)
+            st = step_fn(st)
             return {**st, "step": st["step"] + 1}
 
         final = jax.lax.while_loop(cond, body, state)
@@ -249,4 +492,6 @@ class Engine:
             "tokens": final["out_toks"],
             "lengths": final["out_len"],
             "steps": final["step"],
+            "accepted": final["accepted"],
+            "proposed": final["proposed"],
         }

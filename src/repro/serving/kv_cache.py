@@ -87,15 +87,25 @@ class PagedSpec:
         return self.n_slots * self.wp_cols
 
 
-def build_spec(cfg, n_slots: int, max_total: int, page_size: int) -> PagedSpec:
-    """max_total = max prompt + max generation length per request."""
+def build_spec(
+    cfg, n_slots: int, max_total: int, page_size: int, lookahead: int = 0
+) -> PagedSpec:
+    """max_total = max prompt + max generation length per request.
+
+    ``lookahead`` is the speculative write-ahead: under draft-k speculation
+    writes run up to k positions ahead of the earliest live query in the
+    same forward (the verify chunk, and the drafter's catch-up whose queries
+    start k positions behind its writes).  The ring must therefore cover
+    ``window + lookahead`` positions before wrapping, or a write at position
+    p would evict an entry still inside some chunk query's window.
+    """
     gp = math.ceil(max_total / page_size)
     wp = 0
     if any(_windowed(k) for k in (*cfg.pattern, *cfg.tail)):
         # +1 ring page: the page being overwritten holds only positions
         # older than the window (wp * P > window + P - 1).  When the window
         # covers the whole budget the ring never wraps — clamp to gp.
-        wp = min(gp, math.ceil(cfg.window_size / page_size) + 1)
+        wp = min(gp, math.ceil((cfg.window_size + lookahead) / page_size) + 1)
     return PagedSpec(
         n_slots=n_slots, page_size=page_size, gp_cols=gp, wp_cols=wp
     )
@@ -177,23 +187,27 @@ def pool_bytes(cfg, spec: PagedSpec) -> int:
 
 def paged_cache_write(
     cache: Dict[str, jax.Array],   # {"k": (N,P,K,hd), "v": ..., "pos": (N,P)}
-    k_new: jax.Array,              # (B, 1, K, hd)
+    k_new: jax.Array,              # (B, T, K, hd)
     v_new: jax.Array,
-    positions: jax.Array,          # (B, 1) int32; -1 = inactive
+    positions: jax.Array,          # (B, T) int32; -1 = dropped
     table: jax.Array,              # (B, C) int32 — this slot batch's pages
     active: jax.Array,             # (B,) bool
     page_size: int,
     ring: bool,
 ) -> Dict[str, jax.Array]:
-    """Scatter one decode token per slot into its page; returns new pools.
+    """Scatter a T-token chunk per slot into its pages; returns new pools.
 
-    Invalid writes (inactive slot, pos < 0, past the page budget) go to page
-    id N — out of bounds — and are dropped by JAX scatter semantics, so a
-    retired slot can never corrupt pages re-used by its successor.
+    T = 1 is the plain decode step; T > 1 is the speculative verify chunk
+    and the drafter catch-up.  Chunk positions are consecutive and T is at
+    most page-budget tokens, so no two chunk entries alias one (page, off)
+    cell (ring aliasing needs positions C*P apart).  Invalid writes
+    (inactive slot, pos < 0, past the page budget) go to page id N — out of
+    bounds — and are dropped by JAX scatter semantics, so a retired slot can
+    never corrupt pages re-used by its successor.
     """
     N = cache["k"].shape[0]
     C = table.shape[1]
-    pos = positions[:, 0]
+    pos = positions                                     # (B, T)
     safe = jnp.maximum(pos, 0)
     logical = safe // page_size
     if ring:
@@ -202,11 +216,11 @@ def paged_cache_write(
     else:
         col = jnp.minimum(logical, C - 1)
         ok = (pos >= 0) & (logical < C)
-    page = jnp.take_along_axis(table, col[:, None], axis=1)[:, 0]
-    page = jnp.where(ok & active, page, N)
+    page = jnp.take_along_axis(table, col, axis=1)      # (B, T)
+    page = jnp.where(ok & active[:, None], page, N)
     off = safe % page_size
-    k = cache["k"].at[page, off].set(k_new[:, 0].astype(cache["k"].dtype))
-    v = cache["v"].at[page, off].set(v_new[:, 0].astype(cache["v"].dtype))
+    k = cache["k"].at[page, off].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[page, off].set(v_new.astype(cache["v"].dtype))
     p = cache["pos"].at[page, off].set(pos)
     k = shard(k, "pages", None, "kv_heads", "head_dim")
     v = shard(v, "pages", None, "kv_heads", "head_dim")

@@ -88,6 +88,105 @@ def _sample_one(logits, temp, top_k, top_p, key):
 _sample_vmapped = jax.vmap(_sample_one)
 
 
+def _filtered_dist_one(logits, temp, top_k, top_p):
+    """Exact probabilities of the filtered sampling distribution for one row.
+
+    This is _sample_one's distribution made explicit: softmax over the
+    kept (temperature-scaled) logits, and a one-hot at argmax when greedy —
+    the object speculative rejection sampling needs for both the drafter
+    (propose + acceptance ratio) and the target (verify + residual).
+    Keeping the two in lockstep is what makes speculation lossless: any
+    drift between sample() and filtered_dist() would show up as a biased
+    output distribution.
+    """
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    greedy = jax.nn.one_hot(jnp.argmax(logits), V, dtype=jnp.float32)
+    scaled = logits / jnp.maximum(temp, 1e-6)
+    tau_k, tau_p = _filter_thresholds(scaled, top_k, top_p)
+    keep = scaled > jnp.maximum(tau_k, tau_p)
+    keep |= scaled == jnp.max(scaled)
+    masked = jnp.where(keep, scaled, NEG_INF)
+    probs = jax.nn.softmax(masked)
+    return jnp.where(temp <= 0.0, greedy, probs)
+
+
+_filtered_dist_vmapped = jax.vmap(_filtered_dist_one)
+
+
+def filtered_dist(
+    logits: jax.Array,        # (S, V)
+    temperature: jax.Array,   # (S,) float32
+    top_k: jax.Array,         # (S,) int32
+    top_p: jax.Array,         # (S,) float32
+) -> jax.Array:
+    """Per-slot filtered next-token distribution; returns (S, V) f32 probs.
+
+    Exactly the distribution sample() draws from (one-hot argmax if greedy).
+    """
+    return _filtered_dist_vmapped(logits, temperature, top_k, top_p)
+
+
+def _uniform_from(keys):
+    """One U[0, 1) draw per key; keys (..., 2) uint32."""
+    flat = keys.reshape(-1, 2)
+    u = jax.vmap(lambda k: jax.random.uniform(k, (), jnp.float32))(flat)
+    return u.reshape(keys.shape[:-1])
+
+
+def _categorical_from(keys, probs):
+    """One categorical draw per key from per-row probs (zeros allowed)."""
+    flat_k = keys.reshape(-1, 2)
+    flat_p = probs.reshape(-1, probs.shape[-1])
+    toks = jax.vmap(
+        lambda k, p: jax.random.categorical(k, jnp.log(p))
+    )(flat_k, flat_p)
+    return toks.reshape(keys.shape[:-1]).astype(jnp.int32)
+
+
+def spec_accept(
+    p_dist: jax.Array,        # (S, k+1, V) target filtered dists
+    q_dist: jax.Array,        # (S, k, V) drafter filtered dists
+    drafts: jax.Array,        # (S, k) int32 drafted tokens
+    accept_keys: jax.Array,   # (S, k, 2) uint32 — one per draft position
+    sample_keys: jax.Array,   # (S, k+1, 2) uint32 — one per candidate slot
+):
+    """Standard speculative rejection sampling (leading-accept + residual).
+
+    Draft i is accepted with probability min(1, p_i(d_i) / q_i(d_i)); the
+    chain stops at the first rejection.  With n accepted drafts the extra
+    token is drawn from norm(max(p_n - q_n, 0)) — the residual whose mixture
+    with the accept path reproduces p_n exactly — or, when every draft is
+    accepted (n = k), from p_k itself: the bonus token, which is the same
+    formula with q := 0.  Under greedy (one-hot p, q) the ratio is exactly
+    0 or 1 and the output is the target's argmax chain, token for token.
+
+    Returns (n_acc (S,) int32, extra (S,) int32).
+    """
+    S, k, V = q_dist.shape
+    p_at_d = jnp.take_along_axis(
+        p_dist[:, :k], drafts[..., None], axis=-1
+    )[..., 0]                                            # (S, k)
+    q_at_d = jnp.take_along_axis(q_dist, drafts[..., None], axis=-1)[..., 0]
+    u = _uniform_from(accept_keys)                       # (S, k)
+    accept = u * jnp.maximum(q_at_d, 1e-30) < p_at_d
+    n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
+
+    # residual at the first rejected position (q padded with a zero row so
+    # n_acc = k selects q = 0 and the residual degenerates to p_k: the bonus)
+    q_pad = jnp.concatenate([q_dist, jnp.zeros((S, 1, V), q_dist.dtype)], 1)
+    p_sel = jnp.take_along_axis(p_dist, n_acc[:, None, None], axis=1)[:, 0]
+    q_sel = jnp.take_along_axis(q_pad, n_acc[:, None, None], axis=1)[:, 0]
+    resid = jnp.maximum(p_sel - q_sel, 0.0)
+    z = jnp.sum(resid, axis=-1, keepdims=True)
+    # z = 0 can only happen when q covers p exactly (greedy accept-all is
+    # handled by the bonus row); fall back to p itself — still unbiased.
+    resid = jnp.where(z > 0, resid / jnp.maximum(z, 1e-30), p_sel)
+    key_sel = jnp.take_along_axis(sample_keys, n_acc[:, None, None], axis=1)[:, 0]
+    extra = _categorical_from(key_sel, resid)
+    return n_acc, extra
+
+
 def sample(
     logits: jax.Array,        # (S, V)
     temperature: jax.Array,   # (S,) float32

@@ -1,9 +1,11 @@
-"""Differential tests for the flash-decode kernel (paged single-query attn).
+"""Differential tests for the flash-decode kernels (paged decode attn).
 
-Three-level oracle chain:
+Three-level oracle chain, for both the single-query decode kernel and the
+multi-query verify kernel (speculative decoding's k-token chunk):
   dense attend/make_mask (models/attention.py, the repo's ground truth)
-    == decode_attention_ref (paged gather oracle, kernels/ref.py)
-    == flash_decode kernel body (interpret mode, kernels/decode_attention.py)
+    == decode_attention[_multi]_ref (paged gather oracle, kernels/ref.py)
+    == flash_decode[_multi] kernel body (interpret mode,
+       kernels/decode_attention.py)
 
 Tolerance policy matches the flash-attention forward tests: all compute is
 f32 in both impls, so agreement is to a few ulps — atol 2e-5.
@@ -14,7 +16,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.decode_attention import flash_decode
+from repro.kernels.decode_attention import flash_decode, flash_decode_multi
 from repro.models import attention as A
 
 ATOL = 2e-5
@@ -157,3 +159,96 @@ def test_half_filled_page():
     want = _dense_oracle(q, kd[:, :10], vd[:, :10], q_pos, 0, 0.0)
     got = flash_decode(q, kp, vp, pos, tab, q_pos, scale=0.125, interpret=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# multi-query variant (speculative verify / drafter catch-up chunks)
+# ---------------------------------------------------------------------------
+
+def _multi_case(B, K, G, d, P, C, T, Tq, seed=0):
+    """A paged history of T tokens plus a Tq-query chunk whose rows sit at
+    positions T-Tq .. T-1 (the chunk already written, as the engine does)."""
+    _, kp, vp, pos, tab, _, kd, vd = _paged_case(B, K, G, d, P, C, T, seed)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 9), (B, Tq, K * G, d))
+    q_pos = jnp.broadcast_to(
+        jnp.arange(T - Tq, T)[None], (B, Tq)
+    ).astype(jnp.int32)
+    return q, kp, vp, pos, tab, q_pos, kd, vd
+
+
+def _dense_oracle_multi(q, k, v, q_pos, window, softcap):
+    B, T = k.shape[:2]
+    kv_pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    mask = A.make_mask(q_pos, kv_pos, causal=True, window=window)
+    return A.attend(q, k, v, mask, 0.125, softcap)
+
+
+@pytest.mark.parametrize("K,G", [(1, 4), (2, 2), (4, 1)])  # MQA / GQA / MHA
+@pytest.mark.parametrize("window", [0, 9])
+@pytest.mark.parametrize("softcap", [0.0, 30.0])
+def test_multi_ref_and_kernel_match_dense(K, G, window, softcap):
+    B, d, P, C, T, Tq = 2, 8, 4, 6, 21, 5
+    q, kp, vp, pos, tab, q_pos, kd, vd = _multi_case(B, K, G, d, P, C, T, Tq)
+    want = _dense_oracle_multi(q, kd, vd, q_pos, window, softcap)
+    got_ref = ref.decode_attention_multi_ref(
+        q, kp, vp, pos, tab, q_pos, scale=0.125, window=window, softcap=softcap
+    )
+    np.testing.assert_allclose(np.asarray(got_ref), np.asarray(want), atol=ATOL)
+    got_k = flash_decode_multi(
+        q, kp, vp, pos, tab, q_pos, scale=0.125, window=window,
+        softcap=softcap, interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(got_ref), atol=ATOL)
+
+
+def test_multi_agrees_with_single_query_rows():
+    """Each chunk row must equal the single-query kernel at that position —
+    the property that makes a (k+1)-token verify interchangeable with k+1
+    sequential decode steps."""
+    B, K, G, d, P, C, T, Tq = 2, 2, 2, 8, 4, 6, 19, 4
+    q, kp, vp, pos, tab, q_pos, *_ = _multi_case(B, K, G, d, P, C, T, Tq)
+    multi = flash_decode_multi(
+        q, kp, vp, pos, tab, q_pos, scale=0.125, interpret=True
+    )
+    for t in range(Tq):
+        single = flash_decode(
+            q[:, t], kp, vp, pos, tab, q_pos[:, t], scale=0.125,
+            interpret=True,
+        )
+        np.testing.assert_allclose(
+            np.asarray(multi[:, t]), np.asarray(single), atol=ATOL
+        )
+
+
+def test_multi_ops_dispatch_interpret_and_traced_scale():
+    B, K, G, d, P, C, T, Tq = 2, 2, 2, 8, 4, 5, 17, 3
+    q, kp, vp, pos, tab, q_pos, *_ = _multi_case(B, K, G, d, P, C, T, Tq)
+    want = ops.decode_attention_multi(
+        q, kp, vp, pos, tab, q_pos, scale=0.125, impl="ref"
+    )
+    got = ops.decode_attention_multi(
+        q, kp, vp, pos, tab, q_pos, scale=0.125, impl="interpret"
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+    scaled = jax.jit(
+        lambda s: ops.decode_attention_multi(
+            q, kp, vp, pos, tab, q_pos, scale=s, impl="interpret"
+        )
+    )(jnp.float32(0.125))
+    np.testing.assert_allclose(np.asarray(scaled), np.asarray(want), atol=ATOL)
+
+
+def test_multi_masked_rows_return_zeros():
+    """Whole-slot q_pos = -1 (inactive) and single -1 rows (the drafter
+    catch-up before a short prompt) both produce exact zeros."""
+    B, K, G, d, P, C, T, Tq = 3, 2, 2, 8, 4, 4, 11, 3
+    q, kp, vp, pos, tab, q_pos, *_ = _multi_case(B, K, G, d, P, C, T, Tq)
+    q_pos = q_pos.at[1].set(-1)     # inactive slot
+    q_pos = q_pos.at[0, 0].set(-1)  # one masked leading row
+    for impl in ("ref", "interpret"):
+        out = ops.decode_attention_multi(
+            q, kp, vp, pos, tab, q_pos, scale=0.125, impl=impl
+        )
+        assert bool(jnp.all(out[1] == 0)), impl
+        assert bool(jnp.all(out[0, 0] == 0)), impl
+        assert bool(jnp.all(jnp.isfinite(out))), impl
