@@ -1,0 +1,196 @@
+"""Traffic-shaped serving benchmark: dynamic engine, prefix cache ON vs OFF.
+
+perf_serve.py measures raw throughput on a rectangular workload (all
+prompts identical length, all requests present at t=0).  This bench drives
+the *dynamic* engine (serving/engine.py DynamicEngine: page allocator,
+radix-tree prefix cache, chunked prefill) with the traffic shape those
+features exist for:
+
+  - **Poisson arrivals**: exponential inter-arrival gaps; requests are
+    admitted when they arrive, not as one batch.
+  - **Zipf-shared system prompts**: each request = one of N_SYS system
+    prompts (drawn Zipf-skewed, like real multi-tenant serving where a few
+    templates dominate) + a unique user suffix.  Repeated system prompts
+    are exactly what the radix tree can serve copy-free.
+  - **Mixed lengths**: system and suffix lengths vary per request, so
+    admissions hit partial pages and ragged chunk schedules.
+
+Both runs (cache ON / cache OFF) serve the identical trace greedily and are
+asserted token-for-token identical first — a fast-but-wrong cache fails the
+bench.  Reported per run, from per-token wall-clock timestamps
+(``serve(record_times=True)``):
+
+  - TTFT p50/p95/p99 ms: first-token latency relative to request arrival
+    (queueing + prefill; what chunked prefill + prefix skipping improve);
+  - ITL p50/p95/p99 ms: inter-token latency (decode steadiness; what
+    prefill *interleaving* protects while admissions stream in);
+  - goodput: completed tokens / makespan;
+  - prefill_saved_frac: prompt tokens served from shared pages.  The
+    ISSUE-7 acceptance bar is >= 30% on the full Zipf trace.
+
+Reported CSV (benchmarks/run.py format):
+    perf_traffic.off,<us_per_token>,ttft_p95_ms=..;itl_p95_ms=..;goodput=..
+    perf_traffic.on,<us_per_token>,ttft_p95_ms=..;..;saved=..%
+``run()`` returns the metrics dict; benchmarks/run.py merges it into
+experiments/BENCH_serve.json under the "traffic" key (MERGE_INTO below).
+
+Standalone:
+    PYTHONPATH=src python -m benchmarks.perf_traffic [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import report
+from repro.configs import get_smoke_config
+from repro.models.model import build_model
+from repro.serving.engine import DynamicEngine, EngineConfig
+
+# benchmarks/run.py: merge run()'s dict into BENCH_serve.json["traffic"]
+MERGE_INTO = ("serve", "traffic")
+
+PAGE, SLOTS, CHUNK = 4, 4, 8
+PMAX = 32
+N_SYS, ZIPF_A = 8, 1.2
+
+
+def _workload(cfg, R, rng, mean_gap_s):
+    """R requests: Zipf-drawn system prompt + unique suffix, Poisson gaps."""
+    sys_lens = rng.choice([16, 20, 24], size=N_SYS)
+    sys_prompts = [
+        rng.integers(0, cfg.vocab_size, size=int(n)) for n in sys_lens
+    ]
+    ranks = np.arange(1, N_SYS + 1, dtype=np.float64)
+    p = ranks ** -ZIPF_A
+    p /= p.sum()
+    prompts = np.zeros((R, PMAX), np.int32)
+    lens = np.zeros((R,), np.int32)
+    for r in range(R):
+        s = sys_prompts[rng.choice(N_SYS, p=p)]
+        suf = rng.integers(0, cfg.vocab_size,
+                           size=int(rng.integers(4, PMAX - len(s) + 1)))
+        row = np.concatenate([s, suf])
+        prompts[r, :len(row)] = row
+        lens[r] = len(row)
+    arrivals = np.cumsum(rng.exponential(mean_gap_s, size=R))
+    arrivals[0] = 0.0
+    return jnp.asarray(prompts), jnp.asarray(lens), arrivals
+
+
+def _percentiles(x, unit=1e3):
+    p50, p95, p99 = np.percentile(np.asarray(x, np.float64) * unit,
+                                  [50, 95, 99])
+    return {"p50_ms": float(p50), "p95_ms": float(p95), "p99_ms": float(p99)}
+
+
+def _latency_metrics(out):
+    """TTFT (vs arrival) and inter-token latency from wall-clock stamps."""
+    ttft, itl = [], []
+    for r, times in enumerate(out["token_times"]):
+        if not times:
+            continue
+        ttft.append(times[0] - out["arrivals"][r])
+        itl.extend(np.diff(times))
+    makespan = max(t[-1] for t in out["token_times"] if t)
+    n_tok = int(np.asarray(out["lengths"]).sum())
+    return {
+        "ttft": _percentiles(ttft),
+        "itl": _percentiles(itl if itl else [0.0]),
+        "goodput_tok_s": n_tok / makespan,
+        "makespan_s": float(makespan),
+        "tokens": n_tok,
+    }
+
+
+def _serve_trace(eng, params, prompts, lens, arrivals):
+    # warm the step compile (same (R,) envelope) outside the timed trace,
+    # then drop any prefixes the warmup cached so the measured run starts
+    # from a cold radix tree
+    eng.serve(params, prompts, lens)
+    if eng.blocks.cache is not None:
+        eng.blocks.cache.drop_all()
+    t0 = time.perf_counter()
+    out = eng.serve(params, prompts, lens, arrivals=arrivals,
+                    record_times=True)
+    wall = time.perf_counter() - t0
+    assert eng.compile_count() == 1, "dynamic step recompiled"
+    return out, wall
+
+
+def run(smoke: bool = False):
+    R, gen_len = (8, 6) if smoke else (24, 12)
+    mean_gap = 0.01 if smoke else 0.02
+    cfg = get_smoke_config("smollm-135m").replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    prompts, lens, arrivals = _workload(cfg, R, rng, mean_gap)
+
+    gp_cols = -(-(PMAX + gen_len) // PAGE)
+    ecfg = dict(
+        n_slots=SLOTS, page_size=PAGE, max_prompt_len=PMAX,
+        max_gen_len=gen_len, prefill_chunk=CHUNK,
+        n_pages=2 * SLOTS * gp_cols,     # headroom so the cache survives
+    )
+    off = DynamicEngine(model, EngineConfig(**ecfg))
+    on = DynamicEngine(model, EngineConfig(prefix_cache=True, **ecfg))
+
+    out_off, wall_off = _serve_trace(off, params, prompts, lens, arrivals)
+    out_on, wall_on = _serve_trace(on, params, prompts, lens, arrivals)
+
+    # losslessness gate: the cache may only change *when* tokens appear
+    assert np.array_equal(np.asarray(out_on["tokens"]),
+                          np.asarray(out_off["tokens"])), \
+        "prefix cache changed tokens"
+
+    m_off = _latency_metrics(out_off)
+    m_on = _latency_metrics(out_on)
+    saved = out_on["prefill_cached"] / max(1, out_on["prefill_total"])
+    if not smoke:
+        assert saved >= 0.30, (
+            f"prefix cache saved only {saved:.1%} of prefill tokens "
+            "on the Zipf trace (ISSUE-7 bar: >= 30%)"
+        )
+    assert out_off["prefill_cached"] == 0
+
+    for tag, m, w in (("off", m_off, wall_off), ("on", m_on, wall_on)):
+        extra = (f";saved={saved:.1%}" if tag == "on" else "")
+        report(
+            f"perf_traffic.{tag}", w / m["tokens"] * 1e6,
+            f"ttft_p95_ms={m['ttft']['p95_ms']:.1f};"
+            f"itl_p95_ms={m['itl']['p95_ms']:.2f};"
+            f"goodput={m['goodput_tok_s']:.1f}" + extra,
+        )
+    return {
+        "requests": R,
+        "gen_len": gen_len,
+        "n_sys_prompts": N_SYS,
+        "zipf_a": ZIPF_A,
+        "mean_arrival_gap_s": mean_gap,
+        "prefill_chunk": CHUNK,
+        "prefill_saved_frac": float(saved),
+        "prefill_cached": int(out_on["prefill_cached"]),
+        "prefill_total": int(out_on["prefill_total"]),
+        "lossless": True,
+        "cache_off": m_off,
+        "cache_on": m_on,
+        "smoke": smoke,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for CI (no >=30%% savings assert)")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ def main() -> None:
         fig7_wider_is_better,
         perf_serve,
         perf_sweep,
+        perf_traffic,
         roofline,
         table4_mutransfer_vs_direct,
     )
@@ -41,8 +42,19 @@ def main() -> None:
         "table4": table4_mutransfer_vs_direct,
         "perf_sweep": perf_sweep,
         "perf_serve": perf_serve,
+        "perf_traffic": perf_traffic,
         "roofline": roofline,
     }
+    # a bench may fold its dict into another bench's file under a sub-key
+    # (perf_traffic -> BENCH_serve.json["traffic"]), so one file carries a
+    # whole subsystem's numbers; the owner bench preserves those sub-keys
+    # when it rewrites the file (--only runs must not drop them)
+    merge_keys: dict = {}
+    for mod in benches.values():
+        t, k = getattr(mod, "MERGE_INTO", (None, None))
+        if k is not None:
+            merge_keys.setdefault(t, set()).add(k)
+
     failures = 0
     print("name,us_per_call,derived")
     for name, mod in benches.items():
@@ -53,7 +65,20 @@ def main() -> None:
             if isinstance(result, dict):
                 os.makedirs("experiments", exist_ok=True)
                 short = name[5:] if name.startswith("perf_") else name
-                with open(f"experiments/BENCH_{short}.json", "w") as f:
+                target, key = getattr(mod, "MERGE_INTO", (short, None))
+                path = f"experiments/BENCH_{target}.json"
+                old = {}
+                if os.path.exists(path):
+                    with open(path) as f:
+                        old = json.load(f)
+                if key is not None:
+                    old[key] = result
+                    result = old
+                else:
+                    for k in merge_keys.get(target, ()):
+                        if k in old and k not in result:
+                            result[k] = old[k]
+                with open(path, "w") as f:
                     json.dump(result, f, indent=2)
         except Exception:
             failures += 1

@@ -145,8 +145,15 @@ class Experiment:
         ``engine_config`` or the overrides; it defaults to 4 when a drafter
         is given).  Returns the Engine; call ``engine.serve(params, ...,
         draft_params=...)`` with each model's own params.
+
+        Dynamic-allocator knobs (``prefix_cache``, ``prefill_chunk``,
+        ``n_pages``, ``n_window_pages`` — see docs/serving.md) select the
+        ``DynamicEngine``: host-scheduled page allocation with radix-tree
+        prompt-prefix caching and chunked prefill, token-for-token
+        identical to the static engine.
         """
-        from repro.serving.engine import Engine, EngineConfig  # lazy import
+        # lazy import
+        from repro.serving.engine import DynamicEngine, Engine, EngineConfig
 
         if engine_config is None:
             if drafter is not None:
@@ -157,7 +164,13 @@ class Experiment:
                 engine_config, **ecfg_overrides
             )
         draft_model = None if drafter is None else drafter.build()
-        return Engine(self.build(), engine_config, draft_model=draft_model)
+        dynamic = (
+            engine_config.prefix_cache or engine_config.prefill_chunk
+            or engine_config.n_pages is not None
+            or engine_config.n_window_pages is not None
+        )
+        cls = DynamicEngine if dynamic else Engine
+        return cls(self.build(), engine_config, draft_model=draft_model)
 
     # ------------------------------------------------------------------
     def coord_check(

@@ -163,8 +163,9 @@ def make_rules(
             "image": None, "frames": None,
             # serving: decode slots ride the full DP axis; page pools are
             # sharded over kv_heads/head_dim only (pages replicate so any
-            # slot can own any page)
-            "slots": dp_all, "pages": None,
+            # slot can own any page); dynamic page tables replicate their
+            # logical-column dim alongside
+            "slots": dp_all, "pages": None, "page_cols": None,
         }
         return ShardingRules(rules=rules)
 
@@ -227,5 +228,8 @@ def make_rules(
         # its kv_heads/head_dim dims through the existing kv rules.
         "slots": batch_axes,
         "pages": None,
+        # dynamic page tables are (slots, logical page column) int32 — tiny;
+        # the column dim always replicates
+        "page_cols": None,
     }
     return ShardingRules(rules=rules)

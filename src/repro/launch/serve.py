@@ -2,9 +2,12 @@
 
 Two paths share this entry point:
 
-- **engine** (default): the fully-jitted continuous-batching engine
-  (serving/engine.py) — paged KV cache, slot scheduler, flash-decode
-  kernel, zero per-token Python dispatch.
+- **engine** (default): the continuous-batching engine (serving/engine.py)
+  — paged KV cache, slot scheduler, flash-decode kernel.  By default the
+  *dynamic* engine: host-side page allocator, radix-tree prefix caching
+  (``--prefix-cache``) and chunked prefill (``--prefill-chunk``), with one
+  jitted step.  ``--static`` selects the original fully-jitted engine
+  (whole serve in one while_loop, fixed page tables).
 - **dense** (``--dense``, and the automatic fallback for architectures the
   paged engine cannot serve yet — recurrent/SSD/cross-attention caches):
   the original host-side loop over a dense per-request cache, one jitted
@@ -14,6 +17,8 @@ Two paths share this entry point:
 Usage:
     python -m repro.launch.serve --arch smollm-135m --smoke \
         --requests 8 --prompt-len 32 --gen-len 16 --slots 4
+    python -m repro.launch.serve --arch smollm-135m --smoke \
+        --prefix-cache --prefill-chunk 32 --pool-pages 64
     python -m repro.launch.serve --arch gemma2-2b --smoke --dense
 """
 from __future__ import annotations
@@ -29,7 +34,7 @@ from repro.configs import get_config, get_smoke_config
 from repro.distributed.sharding import make_rules, shardings as sharding_ctx
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import build_model
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.engine import DynamicEngine, Engine, EngineConfig
 from repro.serving.kv_cache import SERVABLE_KINDS, pool_bytes
 
 
@@ -141,6 +146,19 @@ def main(argv=None):
     ap.add_argument("--draft-min-d-head", type=int, default=8,
                     help="d_head floor for the drafter proxy")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static", action="store_true",
+                    help="use the static fully-jitted engine (fixed page "
+                         "tables) instead of the dynamic allocator engine")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prompt-prefix page sharing (dynamic "
+                         "engine only; global-attention configs)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="admit prompts in chunks of this many tokens "
+                         "(page-size multiple; 0 = one-shot prefill; "
+                         "dynamic engine only)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="global page-pool size override (dynamic engine "
+                         "only; default: n_slots * pages-per-slot)")
     ap.add_argument("--dense", action="store_true",
                     help="force the dense per-token-loop driver")
     ap.add_argument("--mixed-lens", action="store_true",
@@ -192,19 +210,34 @@ def main(argv=None):
         print(f"[serve] drafter {dcfg.name}: d_model {dcfg.d_model}, "
               f"{dcfg.n_heads} heads, draft_k={args.draft_k}")
 
+    if args.static and (args.prefix_cache or args.prefill_chunk
+                        or args.pool_pages is not None):
+        ap.error("--prefix-cache/--prefill-chunk/--pool-pages need the "
+                 "dynamic engine (drop --static)")
+
     t0 = time.time()
     with sharding_ctx(mesh, rules):
         if use_engine:
-            engine = Engine(model, EngineConfig(
+            ecfg = EngineConfig(
                 n_slots=args.slots, page_size=args.page_size,
                 max_prompt_len=P, max_gen_len=args.gen_len,
                 eos_token_id=args.eos,
                 draft_k=args.draft_k if speculate else 0,
-            ), draft_model=draft_model)
+                prefix_cache=args.prefix_cache,
+                prefill_chunk=args.prefill_chunk,
+                n_pages=args.pool_pages,
+            )
+            engine = (
+                Engine(model, ecfg, draft_model=draft_model) if args.static
+                else DynamicEngine(model, ecfg, draft_model=draft_model)
+            )
+            n_global = getattr(engine, "n_pages", None)
             print(f"[serve] paged KV pools: {pool_bytes(cfg, engine.spec)/2**20:.1f} MiB "
                   f"({engine.spec.n_slots} slots x {engine.spec.gp_cols} global"
                   + (f" + {engine.spec.wp_cols} ring" if engine.spec.wp_cols else "")
-                  + f" pages of {engine.spec.page_size} tokens)")
+                  + f" pages of {engine.spec.page_size} tokens"
+                  + (f"; dynamic pool of {n_global}" if n_global else "")
+                  + ")")
             out = engine.serve(
                 params, prompts, lens,
                 temperature=jnp.full((R,), args.temperature),
@@ -220,6 +253,11 @@ def main(argv=None):
                 print(f"[serve] speculation: {int(out['accepted'])}/{prop} "
                       f"drafts accepted ({int(out['accepted'])/prop:.1%}) "
                       f"over {int(out['steps'])} engine iterations")
+            if "prefill_cached" in out and out["prefill_total"]:
+                print(f"[serve] prefix cache: {out['prefill_cached']}/"
+                      f"{out['prefill_total']} prompt tokens served from "
+                      f"shared pages "
+                      f"({out['prefill_cached']/out['prefill_total']:.1%})")
         else:
             if args.top_k or args.top_p < 1.0:
                 print("[serve] --top-k/--top-p ignored: the dense driver "

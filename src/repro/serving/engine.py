@@ -52,17 +52,35 @@ Throughput-wise the win is structural: the host loop pays dispatch latency
 per token; here XLA sees the whole generation as one program, and
 speculation collapses ~(1 + accepted) target tokens into one target forward
 (benchmarks/perf_serve.py measures both gaps).
+
+Two engines share the step bodies above:
+
+  - :class:`Engine` — the whole serve in ONE ``lax.while_loop`` under one
+    jit, with static interleaved page tables.  Minimum dispatch overhead;
+    the oracle for everything below.
+  - :class:`DynamicEngine` — a host-side scheduler driving ONE jitted step.
+    Page tables come from serving/allocator.py (free-list allocator +
+    radix-tree prefix cache), so admissions pop pages instead of resetting
+    a fixed stripe, full prompt pages shared with earlier requests map
+    copy-free (prefill skipped for the shared span), and long prompts
+    prefill in page-multiple chunks interleaved with decode.  Everything
+    the host decides per step travels as a fixed-shape traced ``ctrl``
+    block, so the zero-recompile contract survives: one compile per
+    (n_requests,) envelope, any tables/chunks/arrival pattern.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.distributed.sharding import shard
 from repro.serving import kv_cache, sampling
+from repro.serving.allocator import BlockManager
 
 # PRNG event tags: one stream per (request, position, event kind)
 _TAG_SAMPLE = 0   # committed-token sampling (direct, residual resample, bonus)
@@ -78,6 +96,12 @@ class EngineConfig:
     max_gen_len: int = 16        # per-request generation budget
     eos_token_id: Optional[int] = None   # None -> model config's knob
     draft_k: int = 0             # speculative draft length; 0 = off
+    # --- DynamicEngine-only knobs (static Engine rejects them) ---
+    prefix_cache: bool = False   # radix-tree prompt-prefix page sharing
+    prefill_chunk: int = 0       # admit prompts in chunks of this many
+    #                              tokens (page_size multiple); 0 = one-shot
+    n_pages: Optional[int] = None        # global pool size override
+    n_window_pages: Optional[int] = None  # window pool size override
 
 
 class Engine:
@@ -92,6 +116,22 @@ class Engine:
 
     def __init__(self, model, ecfg: EngineConfig = EngineConfig(),
                  draft_model=None):
+        if ecfg.prefix_cache or ecfg.prefill_chunk or (
+            ecfg.n_pages is not None or ecfg.n_window_pages is not None
+        ):
+            raise ValueError(
+                "prefix_cache / prefill_chunk / n_pages / n_window_pages "
+                "need the dynamic allocator — use DynamicEngine"
+            )
+        # lookahead: speculative chunks write up to draft_k positions ahead
+        # of the earliest query in the same forward — the windowed ring must
+        # cover window + k before wrapping (see kv_cache.build_spec).
+        self._init_common(model, ecfg, draft_model, lookahead=ecfg.draft_k)
+        self.gtable, self.wtable = kv_cache.make_tables(self.spec)
+        self._serve = jax.jit(self._run)
+
+    def _init_common(self, model, ecfg: EngineConfig, draft_model, lookahead):
+        """Validation + geometry shared by the static and dynamic engines."""
         kv_cache.check_servable(model.cfg)
         if min(ecfg.n_slots, ecfg.page_size, ecfg.max_prompt_len,
                ecfg.max_gen_len) < 1:
@@ -110,14 +150,10 @@ class Engine:
             eos = model.cfg.eos_token_id
         self.eos = int(eos)
         max_total = ecfg.max_prompt_len + ecfg.max_gen_len
-        # lookahead: speculative chunks write up to draft_k positions ahead
-        # of the earliest query in the same forward — the windowed ring must
-        # cover window + k before wrapping (see kv_cache.build_spec).
         self.spec = kv_cache.build_spec(
             model.cfg, ecfg.n_slots, max_total, ecfg.page_size,
-            lookahead=ecfg.draft_k,
+            lookahead=lookahead,
         )
-        self.gtable, self.wtable = kv_cache.make_tables(self.spec)
         if draft_model is not None:
             kv_cache.check_servable(draft_model.cfg)
             if draft_model.cfg.vocab_size != model.cfg.vocab_size:
@@ -127,10 +163,9 @@ class Engine:
                 )
             self.dspec = kv_cache.build_spec(
                 draft_model.cfg, ecfg.n_slots, max_total, ecfg.page_size,
-                lookahead=ecfg.draft_k,
+                lookahead=lookahead,
             )
             self.dgtable, self.dwtable = kv_cache.make_tables(self.dspec)
-        self._serve = jax.jit(self._run)
 
     # ------------------------------------------------------------------
     def compile_count(self) -> int:
@@ -196,10 +231,285 @@ class Engine:
         k = jax.random.fold_in(k, req)
         return jax.random.fold_in(k, jnp.int32(tag))
 
-    def _run(self, params, draft_params, queue: Dict[str, Any]):
+    def _req_params(self, queue, req):
+        r = jnp.maximum(req, 0)
+        return (
+            queue["temperature"][r], queue["top_k"][r], queue["top_p"][r]
+        )
+
+    def _event_keys(self, base_key, positions, req, tag):
+        """Keys for a (S,) or (S, T) grid of event positions."""
+        one = lambda p, r: self._event_key(base_key, p, r, tag)
+        if positions.ndim == 1:
+            return jax.vmap(one)(positions, req)
+        return jax.vmap(
+            lambda ps, r: jax.vmap(lambda p: one(p, r))(ps)
+        )(positions, req)
+
+    # ------------------------------------------------------------------
+    # step bodies, shared between the static single-jit loop (_run) and
+    # the dynamic host-scheduled engine (DynamicEngine._step_impl): page
+    # tables are parameters — compile-time constants for the static
+    # engine, traced per-step data for the dynamic one.
+    # ------------------------------------------------------------------
+
+    def _admit_into(self, params, draft_params, queue, base_key, st,
+                    slot, req, gtab_row, wtab_row):
+        """One-shot admission of ``req`` into ``slot``: full-prompt
+        prefill-mode forward, page the emitted cache into the slot's rows,
+        sample the first generated token.  Queue advancement is the
+        caller's business (the static loop bumps next_req; the dynamic
+        host scheduler tracks its own queue)."""
         model, cfg, spec = self.model, self.model.cfg, self.spec
-        S = spec.n_slots
         Pmax, Gmax = self.ecfg.max_prompt_len, self.ecfg.max_gen_len
+        prompt = queue["prompts"][req]
+        plen = queue["lens"][req]
+        idx = jnp.arange(Pmax, dtype=jnp.int32)
+        # pads at position Pmax: > every real q_pos during prefill (so
+        # invisible through make_mask) and scatter-dropped from the
+        # emitted cache (out of range for the Pmax-entry buffer).
+        positions = jnp.where(idx < plen, idx, Pmax)[None]
+        logits, pcache = model.forward(
+            params, prompt[None], positions=positions, mode="prefill",
+            cache_len=Pmax, full_cache=True,
+        )
+        last = logits[0, plen - 1]
+        pools = kv_cache.admit_slot(
+            st["pools"], pcache, cfg, spec, gtab_row, wtab_row, plen
+        )
+        # first generated token: the event at input position plen - 1
+        key = self._event_key(base_key, plen - 1, req, _TAG_SAMPLE)
+        t, tk, tp = self._req_params(queue, req)
+        tok = sampling.sample_token(last, t, tk, tp, key)
+        finished = self._is_eos(tok) | (Gmax <= 1)
+        st = {
+            **st,
+            "active": st["active"].at[slot].set(~finished),
+            "slot_req": st["slot_req"].at[slot].set(req),
+            "slot_pos": st["slot_pos"].at[slot].set(plen),
+            "slot_last": st["slot_last"].at[slot].set(tok),
+            "slot_ntok": st["slot_ntok"].at[slot].set(1),
+            "out_toks": st["out_toks"].at[req, 0].set(tok),
+            "out_len": st["out_len"].at[req].set(1),
+            "pools": pools,
+        }
+        if self.draft_model is None:
+            return st
+        return self._drafter_admit(
+            draft_params, queue, st, slot, req, plen, tok
+        )
+
+    def _drafter_admit(self, draft_params, queue, st, slot, req, plen, tok):
+        """Drafter admission: prefill the same prompt into the drafter's
+        own pools, and seed the catch-up context with the last dk prompt
+        tokens + the freshly sampled one (clipped gathers for plen <= dk
+        are harmless: those entries sit at positions < 0 in the catch-up
+        chunk and are masked + scatter-dropped)."""
+        Pmax = self.ecfg.max_prompt_len
+        dk = self.ecfg.draft_k
+        prompt = queue["prompts"][req]
+        idx = jnp.arange(Pmax, dtype=jnp.int32)
+        positions = jnp.where(idx < plen, idx, Pmax)[None]
+        _, dpcache = self.draft_model.forward(
+            draft_params, prompt[None], positions=positions,
+            mode="prefill", cache_len=Pmax, full_cache=True,
+        )
+        dwrow = None if self.dwtable is None else self.dwtable[slot]
+        dpools = kv_cache.admit_slot(
+            st["dpools"], dpcache, self.draft_model.cfg, self.dspec,
+            self.dgtable[slot], dwrow, plen,
+        )
+        gidx = plen - dk + jnp.arange(dk, dtype=jnp.int32)
+        ctx_row = jnp.concatenate(
+            [prompt[jnp.clip(gidx, 0, Pmax - 1)], tok[None]]
+        )
+        return {
+            **st,
+            "dpools": dpools,
+            "slot_ctx": st["slot_ctx"].at[slot].set(ctx_row),
+        }
+
+    def _decode_body(self, params, queue, base_key, st, gtable, wtable):
+        model, spec = self.model, self.spec
+        Gmax = self.ecfg.max_gen_len
+        R = queue["prompts"].shape[0]
+        active = st["active"]
+        # the decode batch is the slot axis — data-parallel at serve time
+        toks = shard(st["slot_last"][:, None], "slots", None)
+        positions = shard(
+            jnp.where(active, st["slot_pos"], -1)[:, None], "slots", None
+        )
+        paged = kv_cache.PagedState(
+            global_table=gtable, window_table=wtable,
+            active=active, page_size=spec.page_size,
+        )
+        logits, pools = model.forward(
+            params, toks, positions=positions, mode="decode",
+            cache=st["pools"], paged=paged,
+        )
+        t, tk, tp = self._req_params(queue, st["slot_req"])
+        keys = self._event_keys(
+            base_key, st["slot_pos"], st["slot_req"], _TAG_SAMPLE
+        )
+        tok = sampling.sample(
+            shard(logits[:, 0], "slots", "vocab"), t, tk, tp, keys
+        )
+        # inactive slots write to row R — out of bounds, dropped
+        wr = jnp.where(active, st["slot_req"], R)
+        out_toks = st["out_toks"].at[wr, st["slot_ntok"]].set(tok)
+        ntok = st["slot_ntok"] + active.astype(jnp.int32)
+        out_len = st["out_len"].at[wr].set(ntok)
+        finished = self._is_eos(tok) | (ntok >= Gmax)
+        return {
+            **st,
+            "active": active & ~finished,
+            "slot_pos": st["slot_pos"] + active.astype(jnp.int32),
+            "slot_last": jnp.where(active, tok, st["slot_last"]),
+            "slot_ntok": jnp.where(active, ntok, st["slot_ntok"]),
+            "out_toks": out_toks,
+            "out_len": out_len,
+            "pools": pools,
+        }
+
+    def _decode_spec_body(self, params, draft_params, queue, base_key, st,
+                          gtable, wtable):
+        model, spec = self.model, self.spec
+        S = spec.n_slots
+        Gmax = self.ecfg.max_gen_len
+        dk = self.ecfg.draft_k
+        R = queue["prompts"].shape[0]
+        active = st["active"]
+        pos = st["slot_pos"]
+        req = st["slot_req"]
+        t, tk, tp = self._req_params(queue, req)
+        joff = jnp.arange(dk + 1, dtype=jnp.int32)
+        dpaged = kv_cache.PagedState(
+            global_table=self.dgtable, window_table=self.dwtable,
+            active=active, page_size=self.dspec.page_size,
+        )
+
+        # --- draft: catch-up chunk, then dk - 1 more single steps ---
+        # The catch-up (dk+1)-token forward re-feeds the last committed
+        # tokens: it simultaneously repairs drafter-cache holes from the
+        # previous rejection and yields the logits for the first draft.
+        cpos = pos[:, None] - dk + joff[None]
+        cpos = jnp.where(active[:, None] & (cpos >= 0), cpos, -1)
+        dlogits, dpools = self.draft_model.forward(
+            draft_params, shard(st["slot_ctx"], "slots", None),
+            positions=cpos, mode="decode", cache=st["dpools"],
+            paged=dpaged,
+        )
+
+        def draft_step(carry, j):
+            logits, dpools = carry          # (S, V) at input pos + j
+            qj = sampling.filtered_dist(logits, t, tk, tp)
+            dkeys = self._event_keys(base_key, pos + j, req, _TAG_DRAFT)
+            dj = sampling._categorical_from(dkeys, qj)
+            # feed the draft back (writes drafter KV at pos + 1 + j);
+            # the last feed's logits go unused but keep the scan body
+            # uniform, and its cache entry saves next iteration's
+            # catch-up from a hole when everything is accepted.
+            dposj = jnp.where(active, pos + 1 + j, -1)[:, None]
+            nlog, dpools = self.draft_model.forward(
+                draft_params, shard(dj[:, None], "slots", None),
+                positions=dposj, mode="decode", cache=dpools,
+                paged=dpaged,
+            )
+            return (nlog[:, 0], dpools), (dj, qj)
+
+        (_, dpools), (drafts_j, q_j) = jax.lax.scan(
+            draft_step, (dlogits[:, -1], dpools),
+            jnp.arange(dk, dtype=jnp.int32),
+        )
+        drafts = drafts_j.T                  # (S, dk)
+        q_dist = jnp.moveaxis(q_j, 0, 1)     # (S, dk, V)
+
+        # --- verify: ONE (dk+1)-token target forward ---
+        # [y_pos, d_0 .. d_{dk-1}] at positions pos .. pos+dk; logits
+        # row i is the target's filtered dist for the token at
+        # pos + 1 + i.  The chunk write doubles as rollback: it lands
+        # exactly on whatever stale entries the last rejection left.
+        tokens_v = jnp.concatenate(
+            [st["slot_last"][:, None], drafts], axis=1
+        )
+        vpos = jnp.where(active[:, None], pos[:, None] + joff[None], -1)
+        paged = kv_cache.PagedState(
+            global_table=gtable, window_table=wtable,
+            active=active, page_size=spec.page_size,
+        )
+        vlogits, pools = model.forward(
+            params, shard(tokens_v, "slots", None), positions=vpos,
+            mode="decode", cache=st["pools"], paged=paged,
+        )
+        V = vlogits.shape[-1]
+        rep = lambda a: jnp.repeat(a, dk + 1, axis=0)
+        p_dist = sampling.filtered_dist(
+            vlogits.reshape(S * (dk + 1), V), rep(t), rep(tk), rep(tp)
+        ).reshape(S, dk + 1, V)
+
+        # --- accept / resample (rejection sampling) ---
+        akeys = self._event_keys(
+            base_key, pos[:, None] + joff[None, :dk], req, _TAG_ACCEPT
+        )
+        skeys = self._event_keys(
+            base_key, pos[:, None] + joff[None], req, _TAG_SAMPLE
+        )
+        n_acc, extra = sampling.spec_accept(
+            p_dist, q_dist, drafts, akeys, skeys
+        )
+        n_acc = jnp.where(active, n_acc, 0)
+
+        # commit chunk: accepted drafts + the resampled/bonus token,
+        # truncated at the first committed EOS and the length budget
+        cand = jnp.concatenate(
+            [drafts, jnp.zeros((S, 1), jnp.int32)], axis=1
+        )
+        cand = jnp.where(joff[None] == n_acc[:, None], extra[:, None], cand)
+        m_raw = n_acc + 1
+        in_commit = self._is_eos(cand) & (joff[None] < m_raw[:, None])
+        any_eos = jnp.any(in_commit, axis=1)
+        first_eos = jnp.argmax(in_commit, axis=1)
+        m_eos = jnp.where(any_eos, first_eos + 1, m_raw)
+        room = Gmax - st["slot_ntok"]
+        m = jnp.where(active, jnp.minimum(m_eos, room), 0)
+
+        wr = jnp.where(active, req, R)
+        commit = joff[None] < m[:, None]
+        col = jnp.where(commit, st["slot_ntok"][:, None] + joff[None], Gmax)
+        out_toks = st["out_toks"].at[wr[:, None], col].set(cand)
+        ntok = st["slot_ntok"] + m
+        out_len = st["out_len"].at[wr].set(ntok)
+        finished = (any_eos & (first_eos < m)) | (ntok >= Gmax)
+        last_tok = jnp.take_along_axis(
+            cand, jnp.maximum(m - 1, 0)[:, None], axis=1
+        )[:, 0]
+        # slide the catch-up context by the commit length
+        full_ctx = jnp.concatenate([st["slot_ctx"], cand], axis=1)
+        new_ctx = jnp.take_along_axis(
+            full_ctx, m[:, None] + joff[None], axis=1
+        )
+        upd = active & (m > 0)
+        return {
+            **st,
+            "active": active & ~finished,
+            "slot_pos": pos + m,
+            "slot_last": jnp.where(upd, last_tok, st["slot_last"]),
+            "slot_ntok": jnp.where(active, ntok, st["slot_ntok"]),
+            "slot_ctx": jnp.where(upd[:, None], new_ctx, st["slot_ctx"]),
+            "out_toks": out_toks,
+            "out_len": out_len,
+            "pools": pools,
+            "dpools": dpools,
+            "accepted": st["accepted"]
+            + jnp.sum(jnp.where(active, n_acc, 0)),
+            "proposed": st["proposed"]
+            + jnp.sum(jnp.where(active, dk, 0)),
+        }
+
+    def _run(self, params, draft_params, queue: Dict[str, Any]):
+        cfg, spec = self.model.cfg, self.spec
+        S = spec.n_slots
+        Gmax = self.ecfg.max_gen_len
         dk = self.ecfg.draft_k
         R = queue["prompts"].shape[0]
         base_key = jax.random.PRNGKey(queue["seed"])
@@ -230,249 +540,29 @@ class Engine:
             # can leave, since one iteration commits at most dk+1 tokens)
             state["slot_ctx"] = jnp.zeros((S, dk + 1), jnp.int32)
 
-        def req_params(req):
-            r = jnp.maximum(req, 0)
-            return (
-                queue["temperature"][r], queue["top_k"][r], queue["top_p"][r]
-            )
-
-        def event_keys(positions, req, tag):
-            """Keys for a (S,) or (S, T) grid of event positions."""
-            one = lambda p, r: self._event_key(base_key, p, r, tag)
-            if positions.ndim == 1:
-                return jax.vmap(one)(positions, req)
-            return jax.vmap(
-                lambda ps, r: jax.vmap(lambda p: one(p, r))(ps)
-            )(positions, req)
-
         # -------------------------- admission --------------------------
         def admit(st):
             slot = jnp.argmin(st["active"].astype(jnp.int32))  # first free
             req = st["next_req"]
-            prompt = queue["prompts"][req]
-            plen = queue["lens"][req]
-            idx = jnp.arange(Pmax, dtype=jnp.int32)
-            # pads at position Pmax: > every real q_pos during prefill (so
-            # invisible through make_mask) and scatter-dropped from the
-            # emitted cache (out of range for the Pmax-entry buffer).
-            positions = jnp.where(idx < plen, idx, Pmax)[None]
-            logits, pcache = model.forward(
-                params, prompt[None], positions=positions, mode="prefill",
-                cache_len=Pmax, full_cache=True,
-            )
-            last = logits[0, plen - 1]
             wrow = None if self.wtable is None else self.wtable[slot]
-            pools = kv_cache.admit_slot(
-                st["pools"], pcache, cfg, spec, self.gtable[slot], wrow, plen
+            st = self._admit_into(
+                params, draft_params, queue, base_key, st, slot, req,
+                self.gtable[slot], wrow,
             )
-            # first generated token: the event at input position plen - 1
-            key = self._event_key(base_key, plen - 1, req, _TAG_SAMPLE)
-            t, tk, tp = req_params(req)
-            tok = sampling.sample(
-                last[None], t[None], tk[None], tp[None], key[None]
-            )[0]
-            finished = self._is_eos(tok) | (Gmax <= 1)
-            st = {
-                **st,
-                "next_req": req + 1,
-                "active": st["active"].at[slot].set(~finished),
-                "slot_req": st["slot_req"].at[slot].set(req),
-                "slot_pos": st["slot_pos"].at[slot].set(plen),
-                "slot_last": st["slot_last"].at[slot].set(tok),
-                "slot_ntok": st["slot_ntok"].at[slot].set(1),
-                "out_toks": st["out_toks"].at[req, 0].set(tok),
-                "out_len": st["out_len"].at[req].set(1),
-                "pools": pools,
-            }
-            if self.draft_model is None:
-                return st
-            # drafter admission: prefill the same prompt into the drafter's
-            # own pools, and seed the catch-up context with the last dk
-            # prompt tokens + the freshly sampled one (clipped gathers for
-            # plen <= dk are harmless: those entries sit at positions < 0
-            # in the catch-up chunk and are masked + scatter-dropped).
-            _, dpcache = self.draft_model.forward(
-                draft_params, prompt[None], positions=positions,
-                mode="prefill", cache_len=Pmax, full_cache=True,
-            )
-            dwrow = None if self.dwtable is None else self.dwtable[slot]
-            dpools = kv_cache.admit_slot(
-                st["dpools"], dpcache, self.draft_model.cfg, self.dspec,
-                self.dgtable[slot], dwrow, plen,
-            )
-            gidx = plen - dk + jnp.arange(dk, dtype=jnp.int32)
-            ctx_row = jnp.concatenate(
-                [prompt[jnp.clip(gidx, 0, Pmax - 1)], tok[None]]
-            )
-            return {
-                **st,
-                "dpools": dpools,
-                "slot_ctx": st["slot_ctx"].at[slot].set(ctx_row),
-            }
+            return {**st, "next_req": req + 1}
 
         # --------------------------- decode ----------------------------
         def decode(st):
-            active = st["active"]
-            # the decode batch is the slot axis — data-parallel at serve time
-            toks = shard(st["slot_last"][:, None], "slots", None)
-            positions = shard(
-                jnp.where(active, st["slot_pos"], -1)[:, None], "slots", None
+            return self._decode_body(
+                params, queue, base_key, st, self.gtable, self.wtable
             )
-            paged = kv_cache.PagedState(
-                global_table=self.gtable, window_table=self.wtable,
-                active=active, page_size=spec.page_size,
-            )
-            logits, pools = model.forward(
-                params, toks, positions=positions, mode="decode",
-                cache=st["pools"], paged=paged,
-            )
-            t, tk, tp = req_params(st["slot_req"])
-            keys = event_keys(st["slot_pos"], st["slot_req"], _TAG_SAMPLE)
-            tok = sampling.sample(
-                shard(logits[:, 0], "slots", "vocab"), t, tk, tp, keys
-            )
-            # inactive slots write to row R — out of bounds, dropped
-            wr = jnp.where(active, st["slot_req"], R)
-            out_toks = st["out_toks"].at[wr, st["slot_ntok"]].set(tok)
-            ntok = st["slot_ntok"] + active.astype(jnp.int32)
-            out_len = st["out_len"].at[wr].set(ntok)
-            finished = self._is_eos(tok) | (ntok >= Gmax)
-            return {
-                **st,
-                "active": active & ~finished,
-                "slot_pos": st["slot_pos"] + active.astype(jnp.int32),
-                "slot_last": jnp.where(active, tok, st["slot_last"]),
-                "slot_ntok": jnp.where(active, ntok, st["slot_ntok"]),
-                "out_toks": out_toks,
-                "out_len": out_len,
-                "pools": pools,
-            }
 
         # ------------------- speculative decode ------------------------
         def decode_spec(st):
-            active = st["active"]
-            pos = st["slot_pos"]
-            req = st["slot_req"]
-            t, tk, tp = req_params(req)
-            joff = jnp.arange(dk + 1, dtype=jnp.int32)
-            dpaged = kv_cache.PagedState(
-                global_table=self.dgtable, window_table=self.dwtable,
-                active=active, page_size=self.dspec.page_size,
+            return self._decode_spec_body(
+                params, draft_params, queue, base_key, st,
+                self.gtable, self.wtable,
             )
-
-            # --- draft: catch-up chunk, then dk - 1 more single steps ---
-            # The catch-up (dk+1)-token forward re-feeds the last committed
-            # tokens: it simultaneously repairs drafter-cache holes from the
-            # previous rejection and yields the logits for the first draft.
-            cpos = pos[:, None] - dk + joff[None]
-            cpos = jnp.where(active[:, None] & (cpos >= 0), cpos, -1)
-            dlogits, dpools = self.draft_model.forward(
-                draft_params, shard(st["slot_ctx"], "slots", None),
-                positions=cpos, mode="decode", cache=st["dpools"],
-                paged=dpaged,
-            )
-
-            def draft_step(carry, j):
-                logits, dpools = carry          # (S, V) at input pos + j
-                qj = sampling.filtered_dist(logits, t, tk, tp)
-                dkeys = event_keys(pos + j, req, _TAG_DRAFT)
-                dj = sampling._categorical_from(dkeys, qj)
-                # feed the draft back (writes drafter KV at pos + 1 + j);
-                # the last feed's logits go unused but keep the scan body
-                # uniform, and its cache entry saves next iteration's
-                # catch-up from a hole when everything is accepted.
-                dposj = jnp.where(active, pos + 1 + j, -1)[:, None]
-                nlog, dpools = self.draft_model.forward(
-                    draft_params, shard(dj[:, None], "slots", None),
-                    positions=dposj, mode="decode", cache=dpools,
-                    paged=dpaged,
-                )
-                return (nlog[:, 0], dpools), (dj, qj)
-
-            (_, dpools), (drafts_j, q_j) = jax.lax.scan(
-                draft_step, (dlogits[:, -1], dpools),
-                jnp.arange(dk, dtype=jnp.int32),
-            )
-            drafts = drafts_j.T                  # (S, dk)
-            q_dist = jnp.moveaxis(q_j, 0, 1)     # (S, dk, V)
-
-            # --- verify: ONE (dk+1)-token target forward ---
-            # [y_pos, d_0 .. d_{dk-1}] at positions pos .. pos+dk; logits
-            # row i is the target's filtered dist for the token at
-            # pos + 1 + i.  The chunk write doubles as rollback: it lands
-            # exactly on whatever stale entries the last rejection left.
-            tokens_v = jnp.concatenate(
-                [st["slot_last"][:, None], drafts], axis=1
-            )
-            vpos = jnp.where(active[:, None], pos[:, None] + joff[None], -1)
-            paged = kv_cache.PagedState(
-                global_table=self.gtable, window_table=self.wtable,
-                active=active, page_size=spec.page_size,
-            )
-            vlogits, pools = model.forward(
-                params, shard(tokens_v, "slots", None), positions=vpos,
-                mode="decode", cache=st["pools"], paged=paged,
-            )
-            V = vlogits.shape[-1]
-            rep = lambda a: jnp.repeat(a, dk + 1, axis=0)
-            p_dist = sampling.filtered_dist(
-                vlogits.reshape(S * (dk + 1), V), rep(t), rep(tk), rep(tp)
-            ).reshape(S, dk + 1, V)
-
-            # --- accept / resample (rejection sampling) ---
-            akeys = event_keys(pos[:, None] + joff[None, :dk], req, _TAG_ACCEPT)
-            skeys = event_keys(pos[:, None] + joff[None], req, _TAG_SAMPLE)
-            n_acc, extra = sampling.spec_accept(
-                p_dist, q_dist, drafts, akeys, skeys
-            )
-            n_acc = jnp.where(active, n_acc, 0)
-
-            # commit chunk: accepted drafts + the resampled/bonus token,
-            # truncated at the first committed EOS and the length budget
-            cand = jnp.concatenate(
-                [drafts, jnp.zeros((S, 1), jnp.int32)], axis=1
-            )
-            cand = jnp.where(joff[None] == n_acc[:, None], extra[:, None], cand)
-            m_raw = n_acc + 1
-            in_commit = self._is_eos(cand) & (joff[None] < m_raw[:, None])
-            any_eos = jnp.any(in_commit, axis=1)
-            first_eos = jnp.argmax(in_commit, axis=1)
-            m_eos = jnp.where(any_eos, first_eos + 1, m_raw)
-            room = Gmax - st["slot_ntok"]
-            m = jnp.where(active, jnp.minimum(m_eos, room), 0)
-
-            wr = jnp.where(active, req, R)
-            commit = joff[None] < m[:, None]
-            col = jnp.where(commit, st["slot_ntok"][:, None] + joff[None], Gmax)
-            out_toks = st["out_toks"].at[wr[:, None], col].set(cand)
-            ntok = st["slot_ntok"] + m
-            out_len = st["out_len"].at[wr].set(ntok)
-            finished = (any_eos & (first_eos < m)) | (ntok >= Gmax)
-            last_tok = jnp.take_along_axis(
-                cand, jnp.maximum(m - 1, 0)[:, None], axis=1
-            )[:, 0]
-            # slide the catch-up context by the commit length
-            full_ctx = jnp.concatenate([st["slot_ctx"], cand], axis=1)
-            new_ctx = jnp.take_along_axis(
-                full_ctx, m[:, None] + joff[None], axis=1
-            )
-            upd = active & (m > 0)
-            return {
-                **st,
-                "active": active & ~finished,
-                "slot_pos": pos + m,
-                "slot_last": jnp.where(upd, last_tok, st["slot_last"]),
-                "slot_ntok": jnp.where(active, ntok, st["slot_ntok"]),
-                "slot_ctx": jnp.where(upd[:, None], new_ctx, st["slot_ctx"]),
-                "out_toks": out_toks,
-                "out_len": out_len,
-                "pools": pools,
-                "dpools": dpools,
-                "accepted": st["accepted"]
-                + jnp.sum(jnp.where(active, n_acc, 0)),
-                "proposed": st["proposed"]
-                + jnp.sum(jnp.where(active, dk, 0)),
-            }
 
         # ------------------------- the one loop -------------------------
         def cond(st):
@@ -495,3 +585,402 @@ class Engine:
             "accepted": final["accepted"],
             "proposed": final["proposed"],
         }
+
+
+class DynamicEngine(Engine):
+    """Host-scheduled engine over the dynamic page allocator + prefix cache.
+
+    The device program is ONE jitted step (admission cond + chunk-prefill
+    cond + decode cond); the host loop around it owns everything that varies
+    per request — which physical pages back each slot (allocator.BlockManager
+    free lists + refcounts), which prompt prefixes are already resident
+    (radix-tree prefix cache: full shared pages map copy-free and skip
+    prefill), when a request may be admitted (full page budget reserved up
+    front; requests queue head-of-line until retirements free pages), and
+    the chunk schedule for long prompts (``prefill_chunk``-token pieces on
+    absolute page-aligned boundaries, interleaved with decode steps).  All
+    of it reaches the device as fixed-shape traced data (page tables + a
+    ``ctrl`` block), so the step compiles once per (n_requests,) envelope.
+
+    Determinism contract: PRNG keys are (request, position)-folded exactly
+    as in the static engine, chunk boundaries sit on absolute multiples of
+    ``prefill_chunk``, and shared spans are floored to the same boundaries —
+    so with prefix caching ON or OFF (and admission chunked or not) a greedy
+    serve is token-for-token identical, and matched-chunk configs are
+    bitwise identical (tests/test_serving.py pins both).
+
+    Prefix sharing applies to global-attention pages only; windowed configs
+    run with sharing disabled (ring pages are overwritten in place by
+    decode, so a shared ring page would be corrupted — see allocator.py).
+
+    KV pools and the prefix cache persist across ``serve()`` calls, so a
+    later serve hits prefixes cached by an earlier one.
+    """
+
+    def __init__(self, model, ecfg: EngineConfig = EngineConfig(),
+                 draft_model=None):
+        C = ecfg.prefill_chunk
+        if C < 0 or (C and C % ecfg.page_size):
+            raise ValueError(
+                f"prefill_chunk must be a multiple of page_size "
+                f"({ecfg.page_size}), got {C}"
+            )
+        # chunk forwards write up to chunk_len - 1 positions ahead of their
+        # earliest query — the windowed ring needs the same lookahead margin
+        # as speculative verify chunks (kv_cache.build_spec)
+        self._init_common(
+            model, ecfg, draft_model,
+            lookahead=max(ecfg.draft_k, C - 1 if C else 0),
+        )
+        spec = self.spec
+        self.n_pages = ecfg.n_pages or spec.n_global_pages
+        self.n_window_pages = (
+            (ecfg.n_window_pages or spec.n_window_pages)
+            if spec.wp_cols else 0
+        )
+        self.blocks = BlockManager(
+            n_pages=self.n_pages, page_size=spec.page_size,
+            gp_cols=spec.gp_cols, wp_cols=spec.wp_cols,
+            n_window_pages=self.n_window_pages,
+            prefix_cache=ecfg.prefix_cache,
+        )
+        self._align = max(C // spec.page_size, 1)
+        self._cmax = C if C else ecfg.max_prompt_len
+        # host-side mirror of the page tables, shipped to the step as data
+        self._gtab = np.zeros((spec.n_slots, spec.gp_cols), np.int32)
+        self._wtab = (
+            np.zeros((spec.n_slots, spec.wp_cols), np.int32)
+            if spec.wp_cols else None
+        )
+        # pools persist across serve() calls: prefix-cached pages stay warm
+        self._pools = kv_cache.init_pools(
+            model.cfg, spec, n_global=self.n_pages,
+            n_window=self.n_window_pages,
+        )
+        self._dpools = (
+            kv_cache.init_pools(draft_model.cfg, self.dspec)
+            if draft_model is not None else None
+        )
+        self._step = jax.jit(self._step_impl)
+
+    # ------------------------------------------------------------------
+    def compile_count(self) -> int:
+        return int(self._step._cache_size())
+
+    # ------------------------------------------------------------------
+    def _ctrl0(self) -> Dict[str, Any]:
+        """No-op control block: no admission, invalidation ids past the
+        pool (scatter-dropped).  Host code mutates a fresh copy per step —
+        every leaf is np-typed so jit treats it as traced data."""
+        ctrl = {
+            "admit_full": np.bool_(False),
+            "admit_chunk": np.bool_(False),
+            "chunk_last": np.bool_(False),
+            "slot": np.int32(0),
+            "req": np.int32(0),
+            "plen": np.int32(1),
+            "chunk_start": np.int32(0),
+            "chunk_len": np.int32(0),
+            "inval_g": np.full((self.spec.gp_cols,), self.n_pages, np.int32),
+        }
+        if self.spec.wp_cols:
+            ctrl["inval_w"] = np.full(
+                (self.spec.wp_cols,), self.n_window_pages, np.int32
+            )
+        return ctrl
+
+    # ------------------------------------------------------------------
+    def _step_impl(self, params, draft_params, st, queue, tables, ctrl):
+        model, cfg, spec = self.model, self.model.cfg, self.spec
+        Pmax, Gmax = self.ecfg.max_prompt_len, self.ecfg.max_gen_len
+        base_key = jax.random.PRNGKey(queue["seed"])
+        gtable = shard(tables["g"], "slots", "page_cols")
+        wtable = tables.get("w")
+        if wtable is not None:
+            wtable = shard(wtable, "slots", "page_cols")
+        slot, req, plen = ctrl["slot"], ctrl["req"], ctrl["plen"]
+
+        def admit_full(st):
+            wrow = None if wtable is None else wtable[slot]
+            return self._admit_into(
+                params, draft_params, queue, base_key, st, slot, req,
+                gtable[slot], wrow,
+            )
+
+        def admit_chunk(st):
+            # freshly popped pages may hold a previous occupant's entries:
+            # the host sends their ids on a request's first chunk (and
+            # pool-size no-ops otherwise — shared pages are never reset)
+            pools = kv_cache.invalidate_pages(
+                st["pools"], cfg, ctrl["inval_g"], ctrl.get("inval_w")
+            )
+            # a decode-mode multi-token forward against the paged cache —
+            # exactly the speculative verify-chunk machinery: the chunk's
+            # own writes land before attention, and per-row position masks
+            # give intra-chunk causality (rows past chunk_len sit at
+            # position -1: masked everywhere, scatter-dropped)
+            j = jnp.arange(self._cmax, dtype=jnp.int32)
+            idx = ctrl["chunk_start"] + j
+            toks = queue["prompts"][req][jnp.clip(idx, 0, Pmax - 1)][None]
+            pos = jnp.where(j < ctrl["chunk_len"], idx, -1)[None]
+            paged = kv_cache.PagedState(
+                global_table=gtable[slot][None],
+                window_table=None if wtable is None else wtable[slot][None],
+                active=jnp.ones((1,), bool),
+                page_size=spec.page_size,
+            )
+            logits, pools = model.forward(
+                params, toks, positions=pos, mode="decode",
+                cache=pools, paged=paged,
+            )
+            st = {**st, "pools": pools}
+
+            def finish(st):
+                # the prompt is fully resident: sample the first generated
+                # token from the last chunk row, keyed exactly like the
+                # one-shot path — (plen - 1, req, SAMPLE)
+                last = logits[0, jnp.maximum(ctrl["chunk_len"] - 1, 0)]
+                key = self._event_key(base_key, plen - 1, req, _TAG_SAMPLE)
+                t, tk, tp = self._req_params(queue, req)
+                tok = sampling.sample_token(last, t, tk, tp, key)
+                finished = self._is_eos(tok) | (Gmax <= 1)
+                st = {
+                    **st,
+                    "active": st["active"].at[slot].set(~finished),
+                    "slot_req": st["slot_req"].at[slot].set(req),
+                    "slot_pos": st["slot_pos"].at[slot].set(plen),
+                    "slot_last": st["slot_last"].at[slot].set(tok),
+                    "slot_ntok": st["slot_ntok"].at[slot].set(1),
+                    "out_toks": st["out_toks"].at[req, 0].set(tok),
+                    "out_len": st["out_len"].at[req].set(1),
+                }
+                if self.draft_model is None:
+                    return st
+                return self._drafter_admit(
+                    draft_params, queue, st, slot, req, plen, tok
+                )
+
+            return jax.lax.cond(ctrl["chunk_last"], finish, lambda s: s, st)
+
+        st = jax.lax.cond(ctrl["admit_full"], admit_full, lambda s: s, st)
+        st = jax.lax.cond(ctrl["admit_chunk"], admit_chunk, lambda s: s, st)
+
+        if self.draft_model is not None:
+            def dec(s):
+                return self._decode_spec_body(
+                    params, draft_params, queue, base_key, s, gtable, wtable
+                )
+        else:
+            def dec(s):
+                return self._decode_body(
+                    params, queue, base_key, s, gtable, wtable
+                )
+        st = jax.lax.cond(jnp.any(st["active"]), dec, lambda s: s, st)
+        info = {
+            "active": st["active"],
+            "slot_ntok": st["slot_ntok"],
+            "out_len": st["out_len"],
+        }
+        return st, info
+
+    # ------------------------------------------------------------------
+    def serve(
+        self,
+        params,
+        prompts,                  # (R, L <= max_prompt_len) int32
+        prompt_lens,              # (R,) int32 true lengths
+        *,
+        temperature=None,
+        top_k=None,
+        top_p=None,
+        seed: int = 0,
+        draft_params=None,
+        arrivals=None,            # (R,) seconds from serve start, ascending
+        record_times: bool = False,
+    ) -> Dict[str, Any]:
+        """Serve R requests (FIFO, optionally arrival-gated).
+
+        Returns the static engine's dict plus ``prefill_cached`` /
+        ``prefill_total`` (prompt tokens served from shared pages vs total)
+        and — with ``record_times`` — per-token wall-clock timestamps and
+        the arrival vector, for the traffic benchmark's latency percentiles.
+        """
+        if (self.draft_model is not None) and draft_params is None:
+            raise ValueError("speculative engine: serve() needs draft_params")
+        prompts_np = np.asarray(prompts, np.int32)
+        lens_np = np.asarray(prompt_lens, np.int32)
+        R, L = prompts_np.shape
+        Pmax = self.ecfg.max_prompt_len
+        if L > Pmax:
+            raise ValueError(f"prompt buffer {L} > max_prompt_len {Pmax}")
+        if int(lens_np.min()) < 1 or int(lens_np.max()) > L:
+            raise ValueError(f"prompt_lens must be in [1, {L}]")
+        if L < Pmax:
+            prompts_np = np.pad(prompts_np, ((0, 0), (0, Pmax - L)))
+        t0p, k0p, p0p = sampling.default_params(R)
+        queue = {
+            "prompts": jnp.asarray(prompts_np),
+            "lens": jnp.asarray(lens_np),
+            "temperature": t0p if temperature is None
+            else jnp.asarray(temperature, jnp.float32),
+            "top_k": k0p if top_k is None else jnp.asarray(top_k, jnp.int32),
+            "top_p": p0p if top_p is None else jnp.asarray(top_p, jnp.float32),
+            "seed": jnp.asarray(seed, jnp.int32),
+        }
+        spec = self.spec
+        S, Gmax, C = spec.n_slots, self.ecfg.max_gen_len, self.ecfg.prefill_chunk
+        arr = (
+            np.zeros((R,), np.float64) if arrivals is None
+            else np.asarray(arrivals, np.float64)
+        )
+        st = {
+            "step": jnp.int32(0),
+            "active": jnp.zeros((S,), bool),
+            "slot_req": jnp.full((S,), -1, jnp.int32),
+            "slot_pos": jnp.zeros((S,), jnp.int32),
+            "slot_last": jnp.zeros((S,), jnp.int32),
+            "slot_ntok": jnp.zeros((S,), jnp.int32),
+            "out_toks": jnp.zeros((R, Gmax), jnp.int32),
+            "out_len": jnp.zeros((R,), jnp.int32),
+            "accepted": jnp.int32(0),
+            "proposed": jnp.int32(0),
+            "pools": self._pools,
+        }
+        if self.draft_model is not None:
+            st["dpools"] = self._dpools
+            st["slot_ctx"] = jnp.zeros((S, self.ecfg.draft_k + 1), jnp.int32)
+
+        pending = list(range(R))
+        free = list(range(S))
+        occupied: Dict[int, int] = {}     # slot -> req (decoding, holds pages)
+        cur = None                        # the one in-flight admission
+        prefill_cached = prefill_total = 0
+        token_times: list = [[] for _ in range(R)]
+        prev_len = np.zeros((R,), np.int64)
+        steps = 0
+        chunks_bound = (Pmax // C + 2) if C else 2
+        max_steps = R * (Gmax + chunks_bound + 2) + S + 8
+        t0 = time.perf_counter()
+
+        while pending or cur is not None or occupied:
+            now = time.perf_counter() - t0
+            # idle until the next arrival when nothing is running
+            if (cur is None and not occupied and pending
+                    and arr[pending[0]] > now):
+                time.sleep(min(arr[pending[0]] - now, 2e-3))
+                continue
+            # ---- start a new admission (at most one in flight) ----
+            if (cur is None and pending and free
+                    and arr[pending[0]] <= now):
+                req = pending[0]
+                plen = int(lens_np[req])
+                prompt = [int(x) for x in prompts_np[req, :plen]]
+                slot = min(free)
+                adm = self.blocks.try_admit(
+                    slot, prompt, align_pages=self._align
+                )
+                if adm is None:
+                    # head-of-line wait: retirements will free pages
+                    if not occupied:
+                        raise RuntimeError(
+                            f"admission stalled: request {req} needs pages "
+                            "but no live request will ever free any"
+                        )
+                else:
+                    pending.pop(0)
+                    free.remove(slot)
+                    self._gtab[slot, :] = adm.table_row
+                    if self._wtab is not None:
+                        self._wtab[slot, :] = adm.wtab_row
+                    c = adm.cached_len
+                    prefill_cached += c
+                    prefill_total += plen
+                    if C:
+                        chunks = [
+                            (s0, min(C, plen - s0))
+                            for s0 in range(c, plen, C)
+                        ]
+                    elif c:
+                        chunks = [(c, plen - c)]   # one suffix chunk
+                    else:
+                        chunks = None              # one-shot prefill path
+                    cur = {"req": req, "slot": slot, "plen": plen,
+                           "prompt": prompt, "chunks": chunks, "i": 0,
+                           "adm": adm}
+            # ---- this step's control block ----
+            ctrl = self._ctrl0()
+            finishing = None
+            if cur is not None:
+                ctrl["slot"] = np.int32(cur["slot"])
+                ctrl["req"] = np.int32(cur["req"])
+                ctrl["plen"] = np.int32(cur["plen"])
+                if cur["chunks"] is None:
+                    ctrl["admit_full"] = np.bool_(True)
+                    finishing, cur = cur, None
+                else:
+                    s0, l0 = cur["chunks"][cur["i"]]
+                    ctrl["admit_chunk"] = np.bool_(True)
+                    ctrl["chunk_start"] = np.int32(s0)
+                    ctrl["chunk_len"] = np.int32(l0)
+                    if cur["i"] == 0:
+                        adm = cur["adm"]
+                        n = len(adm.fresh_pages)
+                        ctrl["inval_g"][:n] = adm.fresh_pages
+                        if "inval_w" in ctrl and adm.fresh_wpages:
+                            ctrl["inval_w"][:len(adm.fresh_wpages)] = (
+                                adm.fresh_wpages
+                            )
+                    if cur["i"] == len(cur["chunks"]) - 1:
+                        ctrl["chunk_last"] = np.bool_(True)
+                        finishing, cur = cur, None
+                    else:
+                        cur["i"] += 1
+            tables = {"g": jnp.asarray(self._gtab)}
+            if self._wtab is not None:
+                tables["w"] = jnp.asarray(self._wtab)
+            st, info = self._step(
+                params, draft_params, st, queue, tables, ctrl
+            )
+            info = jax.device_get(info)
+            steps += 1
+            tnow = time.perf_counter() - t0
+            # ---- host bookkeeping ----
+            if finishing is not None:
+                # prompt fully resident: publish its full pages to the
+                # radix tree before any chance of retirement
+                self.blocks.complete(finishing["slot"], finishing["prompt"])
+                occupied[finishing["slot"]] = finishing["req"]
+            new_len = np.asarray(info["out_len"], np.int64)
+            for r in np.nonzero(new_len > prev_len)[0]:
+                token_times[r].extend(
+                    [tnow] * int(new_len[r] - prev_len[r])
+                )
+            prev_len = new_len
+            for slot in sorted(occupied):
+                if not bool(info["active"][slot]):
+                    self.blocks.retire(slot)
+                    del occupied[slot]
+                    free.append(slot)
+            if steps > max_steps:
+                raise RuntimeError(
+                    f"dynamic engine exceeded {max_steps} steps — "
+                    "host scheduler bug"
+                )
+
+        # pools stay warm: the next serve() hits prefixes cached by this one
+        self._pools = st["pools"]
+        if self.draft_model is not None:
+            self._dpools = st["dpools"]
+        out = {
+            "tokens": st["out_toks"],
+            "lengths": st["out_len"],
+            "steps": jnp.int32(steps),
+            "accepted": st["accepted"],
+            "proposed": st["proposed"],
+            "prefill_cached": prefill_cached,
+            "prefill_total": prefill_total,
+        }
+        if record_times:
+            out["token_times"] = token_times
+            out["arrivals"] = arr
+        return out

@@ -138,10 +138,21 @@ class PagedState:
 # pools
 # ---------------------------------------------------------------------------
 
-def init_pools(cfg, spec: PagedSpec) -> Dict[str, Any]:
+def init_pools(
+    cfg,
+    spec: PagedSpec,
+    n_global: Optional[int] = None,
+    n_window: Optional[int] = None,
+) -> Dict[str, Any]:
     """Zeroed pool pytree mirroring run_stack's cache layout:
     {"groups": {"<i>_<kind>": {"attn": pool}}, "tail": {...}} with group
-    pools stacked over n_groups."""
+    pools stacked over n_groups.
+
+    ``n_global``/``n_window`` override the pool sizes (default: the static
+    interleaved geometry ``spec.n_*_pages``) — the dynamic allocator sizes
+    pools independently of ``n_slots * cols`` so prefix-cached pages can
+    outlive their slot.
+    """
     K, hd = cfg.n_kv_heads, cfg.d_head
     dtype = _DTYPES[cfg.dtype]
 
@@ -154,7 +165,9 @@ def init_pools(cfg, spec: PagedSpec) -> Dict[str, Any]:
         }
 
     def n_pages(kind):
-        return spec.n_window_pages if _windowed(kind) else spec.n_global_pages
+        if _windowed(kind):
+            return spec.n_window_pages if n_window is None else n_window
+        return spec.n_global_pages if n_global is None else n_global
 
     return {
         "groups": {
@@ -261,13 +274,13 @@ def admit_slot(
 
     gcol = jnp.minimum(t // spec.page_size, spec.gp_cols - 1)
     g_ok = valid & (t // spec.page_size < spec.gp_cols)
-    gpage = jnp.where(g_ok, gtab_row[gcol], spec.n_global_pages)
-    wpage = None
+    gpage_raw = gtab_row[gcol]
+    w_ok = wpage_raw = None
     if spec.wp_cols:
         wcap = spec.wp_cols * spec.page_size
         w_ok = valid & (t >= plen - wcap)   # only the ring's reach survives
         wcol = (t // spec.page_size) % spec.wp_cols
-        wpage = jnp.where(w_ok, wtab_row[wcol], spec.n_window_pages)
+        wpage_raw = wtab_row[wcol]
 
     out: Dict[str, Any] = {"groups": {}, "tail": {}}
     for section, kinds in (("groups", cfg.pattern), ("tail", cfg.tail)):
@@ -276,7 +289,13 @@ def admit_slot(
             pool = pools[section][key]["attn"]
             src = pcache[section][key]["attn"]
             win = _windowed(kind)
-            page = wpage if win else gpage
+            # the drop page id is one past *this* pool (pools may be sized
+            # independently of the static spec geometry by the dynamic
+            # allocator, so the spec's page count is not a safe sentinel)
+            n_pool = pool["pos"].shape[-2]
+            page = jnp.where(
+                w_ok if win else g_ok, wpage_raw if win else gpage_raw, n_pool
+            )
             rows = wtab_row if win else gtab_row
             if section == "groups":
                 ksrc, vsrc = src["k"][:, 0], src["v"][:, 0]  # (G, Pmax, K, hd)
@@ -303,6 +322,39 @@ def admit_slot(
                     "pos": pos_pool.at[page, off].set(pos_row),
                 }
             out[section][key] = {"attn": new}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# page invalidation (dynamic allocator: freshly popped pages may hold a
+# previous occupant's entries)
+# ---------------------------------------------------------------------------
+
+def invalidate_pages(
+    pools: Dict[str, Any],
+    cfg,
+    g_pages: jax.Array,              # (n,) int32 page ids; >= pool size = noop
+    w_pages: Optional[jax.Array] = None,
+) -> Dict[str, Any]:
+    """Set pos = -1 on the given physical pages across every layer (global
+    pools get ``g_pages``, windowed pools ``w_pages``).  Page ids at or past
+    the pool size are dropped by scatter OOB semantics, so callers pad
+    fixed-shape id arrays with the pool size to keep traces stable.  Stale
+    k/v bytes remain but are masked by pos everywhere."""
+    out: Dict[str, Any] = {"groups": {}, "tail": {}}
+    for section, kinds in (("groups", cfg.pattern), ("tail", cfg.tail)):
+        for i, kind in enumerate(kinds):
+            key = f"{i}_{kind}"
+            pool = pools[section][key]["attn"]
+            pages = w_pages if _windowed(kind) else g_pages
+            if pages is None:
+                out[section][key] = {"attn": pool}
+                continue
+            if section == "groups":
+                pos = pool["pos"].at[:, pages].set(-1)
+            else:
+                pos = pool["pos"].at[pages].set(-1)
+            out[section][key] = {"attn": {**pool, "pos": pos}}
     return out
 
 

@@ -196,3 +196,19 @@ def sample(
 ) -> jax.Array:
     """Per-slot next-token sampling; returns (S,) int32."""
     return _sample_vmapped(logits, temperature, top_k, top_p, keys)
+
+
+def sample_token(
+    logits: jax.Array,        # (V,)
+    temperature: jax.Array,   # () float32
+    top_k: jax.Array,         # () int32
+    top_p: jax.Array,         # () float32
+    key: jax.Array,           # (2,) uint32
+) -> jax.Array:
+    """Single-row convenience over :func:`sample`; returns () int32.  Both
+    engines' admission paths sample the first generated token through this,
+    so a one-shot prefill and a chunked prefill ending at the same position
+    draw the identical token."""
+    return sample(
+        logits[None], temperature[None], top_k[None], top_p[None], key[None]
+    )[0]

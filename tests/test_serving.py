@@ -18,7 +18,8 @@ from repro.launch.serve import _count_generated, generate
 from repro.models import attention as A
 from repro.models.model import build_model
 from repro.serving import kv_cache, sampling
-from repro.serving.engine import Engine, EngineConfig
+from repro.serving.allocator import PoolExhausted
+from repro.serving.engine import DynamicEngine, Engine, EngineConfig
 
 
 # ---------------------------------------------------------------------------
@@ -430,3 +431,330 @@ def test_sampling_topk_topp_support():
         logits, temp, jnp.zeros((1,), jnp.int32), jnp.array([1e-6]),
         _keys(1, i))[0]) for i in range(16)]
     assert set(toks) == {0}
+
+
+# ---------------------------------------------------------------------------
+# dynamic engine: allocator-backed serving vs the static engine
+#
+# The static engine above is the proven oracle (token-for-token vs the dense
+# loop).  The DynamicEngine moves page assignment to a host-side allocator,
+# adds radix-tree prefix caching and chunked prefill — none of which may
+# change a single emitted token.  Every test here pins dynamic == static
+# (greedy AND sampled: PRNG keys are (request, position)-folded, so they are
+# invariant to admission timing, chunking and page placement).
+# ---------------------------------------------------------------------------
+
+_DYN = dict(n_slots=2, page_size=4, max_prompt_len=16, max_gen_len=6)
+
+
+def _overlap_prompts(cfg, L=16, seed=21):
+    """5 prompts exercising every overlap class: rows 0-2 share a 2-page
+    (8-token) prefix with distinct tails and non-page-multiple lengths,
+    row 3 shares exactly 1 full page + half of the next, row 4 is disjoint."""
+    rng = np.random.default_rng(seed)
+    V = cfg.vocab_size
+    base = rng.integers(0, V, size=L)
+    rows = []
+    for _ in range(3):
+        r = base.copy()
+        r[8:] = rng.integers(0, V, size=L - 8)
+        rows.append(r)
+    partial = base.copy()
+    partial[6:] = rng.integers(0, V, size=L - 6)
+    rows.append(partial)
+    rows.append(rng.integers(0, V, size=L))
+    prompts = jnp.asarray(np.stack(rows), jnp.int32)
+    lens = jnp.asarray([16, 12, 9, 16, 16], jnp.int32)
+    return prompts, lens
+
+
+def _attn_pools(pools):
+    """Flatten the {section: {key: {"attn": pool}}} tree into pool dicts."""
+    return [
+        entry["attn"]
+        for section in pools.values()
+        for entry in section.values()
+    ]
+
+
+def _assert_pools_equal(pools_a, pools_b, atol=2e-5):
+    """pos bit-identical; k/v equal on every written row.  Rows with
+    pos == -1 are excluded: one-shot admission invalidates them wholesale
+    while chunked prefill scatter-drops them, so their *values* are
+    unspecified by contract (they are masked out of every attention read)."""
+    a, b = _attn_pools(pools_a), _attn_pools(pools_b)
+    assert len(a) == len(b) and a
+    for pa, pb in zip(a, b):
+        pos_a, pos_b = np.asarray(pa["pos"]), np.asarray(pb["pos"])
+        np.testing.assert_array_equal(pos_a, pos_b)
+        mask = pos_a >= 0
+        for key in ("k", "v"):
+            np.testing.assert_allclose(
+                np.asarray(pa[key])[mask], np.asarray(pb[key])[mask],
+                atol=atol,
+            )
+
+
+def test_dynamic_one_shot_matches_static(global_m, global_engine):
+    """No chunking, no prefix cache: the allocator path alone (dynamic page
+    tables as traced data) must be invisible — greedy and sampled."""
+    cfg, model, params = global_m
+    eng = DynamicEngine(model, EngineConfig(**_DYN))
+    prompts, lens = _prompts(cfg, R=5, L=16)
+    out = eng.serve(params, prompts, lens, record_times=True)
+    want = global_engine.serve(params, prompts, lens)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]),
+                                  np.asarray(want["tokens"]))
+    assert out["prefill_cached"] == 0 and out["prefill_total"] > 0
+    # record_times: one wall-clock stamp per emitted token
+    lens_out = np.asarray(out["lengths"])
+    assert [len(t) for t in out["token_times"]] == lens_out.tolist()
+    temp = jnp.array([0.0, 0.9, 1.2, 0.0, 0.7])
+    a = eng.serve(params, prompts, lens, temperature=temp, seed=5)
+    b = global_engine.serve(params, prompts, lens, temperature=temp, seed=5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    assert eng.compile_count() == 1
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 12])
+def test_dynamic_chunked_matches_static(global_m, global_engine, chunk):
+    """Chunked prefill interleaved with decode == one-shot static serve,
+    across chunk sizes that do and don't divide the prompt lengths."""
+    cfg, model, params = global_m
+    eng = DynamicEngine(model, EngineConfig(prefill_chunk=chunk, **_DYN))
+    prompts, lens = _prompts(cfg, R=5, L=16, seed=3)
+    out = eng.serve(params, prompts, lens)
+    want = global_engine.serve(params, prompts, lens)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]),
+                                  np.asarray(want["tokens"]))
+    temp = jnp.full((5,), 0.8)
+    a = eng.serve(params, prompts, lens, temperature=temp, seed=9)
+    b = global_engine.serve(params, prompts, lens, temperature=temp, seed=9)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    assert eng.compile_count() == 1
+
+
+@pytest.mark.parametrize("chunk", [4, 8])
+def test_chunked_prefill_pools_match_one_shot(global_m, chunk):
+    """The paged cache a chunked admission builds is the one-shot cache:
+    pos pages bit-identical, k/v numerically equal on every written row.
+    Fresh engines + the deterministic LIFO free list give identical page
+    ids, so the raw pools are directly comparable.  Prompt lengths include
+    non-page-multiples (trailing partial pages)."""
+    cfg, model, params = global_m
+    ecfg_oneshot = EngineConfig(**_DYN)
+    a = DynamicEngine(model, EngineConfig(prefill_chunk=chunk, **_DYN))
+    b = DynamicEngine(model, ecfg_oneshot)
+    prompts = jnp.asarray(
+        np.random.default_rng(11).integers(0, cfg.vocab_size, (3, 16)),
+        jnp.int32,
+    )
+    lens = jnp.asarray([16, 13, 7], jnp.int32)   # 13, 7: partial last pages
+    out_a = a.serve(params, prompts, lens)
+    out_b = b.serve(params, prompts, lens)
+    np.testing.assert_array_equal(np.asarray(out_a["tokens"]),
+                                  np.asarray(out_b["tokens"]))
+    _assert_pools_equal(a._pools, b._pools)
+
+
+def test_dynamic_chunked_matches_static_windowed(windowed_m):
+    """Ring layers: chunked admission must land window writes on the same
+    ring columns the one-shot path does.  gemma2 alternates local/global
+    layers; 10 decode steps wrap the window-6 ring.  Prefix sharing is
+    disabled by policy on windowed configs (ring pages are overwritten in
+    place), so the cache must report zero hits."""
+    cfg, model, params = windowed_m
+    ecfg = dict(n_slots=2, page_size=4, max_prompt_len=12, max_gen_len=10)
+    static = Engine(model, EngineConfig(**ecfg))
+    eng = DynamicEngine(
+        model, EngineConfig(prefill_chunk=4, prefix_cache=True, **ecfg)
+    )
+    assert eng.blocks.cache is None          # sharing off on ring configs
+    prompts, lens = _prompts(cfg, R=3, L=12)
+    out = eng.serve(params, prompts, lens)
+    want = static.serve(params, prompts, lens)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]),
+                                  np.asarray(want["tokens"]))
+    assert out["prefill_cached"] == 0
+    assert eng.compile_count() == 1
+
+
+def test_prefix_cache_on_off_equivalence(global_m):
+    """The oracle test for prefix caching: ON must be token-for-token OFF,
+    greedy and sampled, over full / partial / zero prompt overlap — and a
+    second serve on the warm cache (more hits, including self-hits) must
+    still be identical."""
+    cfg, model, params = global_m
+    on = DynamicEngine(
+        model, EngineConfig(prefill_chunk=4, prefix_cache=True, **_DYN)
+    )
+    off = DynamicEngine(model, EngineConfig(prefill_chunk=4, **_DYN))
+    prompts, lens = _overlap_prompts(cfg)
+    got_off = off.serve(params, prompts, lens)
+    got_on1 = on.serve(params, prompts, lens)
+    got_on2 = on.serve(params, prompts, lens)      # warm radix tree
+    for got in (got_on1, got_on2):
+        np.testing.assert_array_equal(np.asarray(got["tokens"]),
+                                      np.asarray(got_off["tokens"]))
+    # real sharing happened, and the warm cache shared strictly more
+    assert got_on1["prefill_cached"] > 0
+    assert got_on2["prefill_cached"] > got_on1["prefill_cached"]
+    assert got_off["prefill_cached"] == 0
+    # sampled path: PRNG keys are position-folded, so cache hits (which
+    # skip prefill work entirely) cannot shift any draw
+    temp = jnp.array([0.0, 1.0, 0.8, 0.0, 0.9])
+    s_on = on.serve(params, prompts, lens, temperature=temp, seed=13)
+    s_off = off.serve(params, prompts, lens, temperature=temp, seed=13)
+    np.testing.assert_array_equal(np.asarray(s_on["tokens"]),
+                                  np.asarray(s_off["tokens"]))
+    assert on.compile_count() == 1 and off.compile_count() == 1
+    on.blocks.check_invariants()
+
+
+def test_prefix_cache_eviction_under_pressure(global_m):
+    """Pool sized for 2 live requests + almost no cache headroom: serving a
+    stream of disjoint prompts forces the radix tree to evict LRU leaves on
+    nearly every admission.  Outputs must still match the cache-OFF engine
+    and the allocator must stay consistent."""
+    cfg, model, params = global_m
+    spec = kv_cache.build_spec(cfg, _DYN["n_slots"],
+                               _DYN["max_prompt_len"] + _DYN["max_gen_len"],
+                               _DYN["page_size"])
+    n_pages = 2 * spec.gp_cols + 2
+    on = DynamicEngine(model, EngineConfig(
+        prefill_chunk=4, prefix_cache=True, n_pages=n_pages, **_DYN
+    ))
+    off = DynamicEngine(model, EngineConfig(
+        prefill_chunk=4, n_pages=n_pages, **_DYN
+    ))
+    rng = np.random.default_rng(31)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (6, 16)), jnp.int32)
+    lens = jnp.full((6,), 16, jnp.int32)
+    got_on = on.serve(params, prompts, lens)
+    got_off = off.serve(params, prompts, lens)
+    np.testing.assert_array_equal(np.asarray(got_on["tokens"]),
+                                  np.asarray(got_off["tokens"]))
+    on.blocks.check_invariants()
+    # whatever survives in the cache fits the headroom we left
+    assert on.blocks.galloc.n_allocated <= n_pages
+
+
+def test_pool_exhaustion_queues_until_pages_free(global_m, global_engine):
+    """A pool that fits exactly ONE request: admissions must queue behind
+    retirements (head-of-line), never corrupt, and drain completely."""
+    cfg, model, params = global_m
+    spec = kv_cache.build_spec(cfg, _DYN["n_slots"],
+                               _DYN["max_prompt_len"] + _DYN["max_gen_len"],
+                               _DYN["page_size"])
+    eng = DynamicEngine(
+        model, EngineConfig(n_pages=spec.gp_cols, **_DYN)
+    )
+    prompts, lens = _prompts(cfg, R=3, L=16, seed=6)
+    out = eng.serve(params, prompts, lens)
+    want = global_engine.serve(params, prompts, lens)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]),
+                                  np.asarray(want["tokens"]))
+    assert eng.blocks.galloc.n_free == spec.gp_cols    # fully drained
+    eng.blocks.check_invariants()
+
+
+def test_single_request_exceeding_pool_raises(global_m):
+    """Queueing can never satisfy a request larger than the whole pool —
+    that must fail loudly, not deadlock."""
+    cfg, model, params = global_m
+    spec = kv_cache.build_spec(cfg, _DYN["n_slots"],
+                               _DYN["max_prompt_len"] + _DYN["max_gen_len"],
+                               _DYN["page_size"])
+    eng = DynamicEngine(
+        model, EngineConfig(n_pages=spec.gp_cols - 1, **_DYN)
+    )
+    prompts, lens = _prompts(cfg, R=2, L=16, seed=6)
+    with pytest.raises(PoolExhausted):
+        eng.serve(params, prompts, lens)
+
+
+def test_all_slots_share_then_diverge(global_m, global_engine):
+    """Every request is the same 3-page prefix + a unique tail; with 3 slots
+    live at once the shared pages are mapped by all of them while their
+    decode streams diverge into private pages.  Token-for-token static, and
+    the cached-token count is exact: req 0 seeds the tree, reqs 1-3 each
+    skip the full 3-page (12-token) shared span."""
+    cfg, model, params = global_m
+    rng = np.random.default_rng(41)
+    base = rng.integers(0, cfg.vocab_size, size=16)
+    rows = []
+    for _ in range(4):
+        r = base.copy()
+        r[12:] = rng.integers(0, cfg.vocab_size, size=4)
+        rows.append(r)
+    prompts = jnp.asarray(np.stack(rows), jnp.int32)
+    lens = jnp.full((4,), 16, jnp.int32)
+    eng = DynamicEngine(model, EngineConfig(
+        prefill_chunk=4, prefix_cache=True,
+        n_slots=3, page_size=4, max_prompt_len=16, max_gen_len=6,
+    ))
+    out = eng.serve(params, prompts, lens)
+    want = global_engine.serve(params, prompts, lens)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]),
+                                  np.asarray(want["tokens"]))
+    assert out["prefill_cached"] == 3 * 12
+    eng.blocks.check_invariants()
+
+
+def test_dynamic_trace_stable_zero_recompiles(global_m):
+    """One compiled step across every host-side decision: different prompt
+    sets, lengths, seeds, sampling params, cache hits and misses, chunk
+    schedules, queueing — all of it is traced data."""
+    cfg, model, params = global_m
+    eng = DynamicEngine(
+        model, EngineConfig(prefill_chunk=8, prefix_cache=True, **_DYN)
+    )
+    p1, l1 = _prompts(cfg, R=5, L=16, seed=3)
+    p2, l2 = _prompts(cfg, R=5, L=16, seed=9)
+    eng.serve(params, p1, l1, seed=0)
+    assert eng.compile_count() == 1
+    eng.serve(params, p2, l2, seed=7, temperature=jnp.full((5,), 0.5))
+    eng.serve(params, p1, l2, seed=1)
+    assert eng.compile_count() == 1
+
+
+def test_dynamic_speculative_matches_static(global_m):
+    """Speculative decoding (µP-proxy drafter) composed with chunked prefill
+    AND prefix caching: tokens and acceptance statistics must match the
+    static speculative engine exactly."""
+    cfg, model, params = global_m
+    dcfg = cfg.scaled(0.5, min_d_head=8)
+    dmodel = build_model(dcfg)
+    dparams = dmodel.init(jax.random.PRNGKey(7))
+    static = Engine(model, EngineConfig(draft_k=3, **_DYN),
+                    draft_model=dmodel)
+    eng = DynamicEngine(
+        model,
+        EngineConfig(draft_k=3, prefill_chunk=8, prefix_cache=True, **_DYN),
+        draft_model=dmodel,
+    )
+    prompts, lens = _overlap_prompts(cfg)
+    out = eng.serve(params, prompts, lens, draft_params=dparams)
+    want = static.serve(params, prompts, lens, draft_params=dparams)
+    np.testing.assert_array_equal(np.asarray(out["tokens"]),
+                                  np.asarray(want["tokens"]))
+    assert int(out["accepted"]) == int(want["accepted"])
+    assert int(out["proposed"]) == int(want["proposed"])
+    assert out["prefill_cached"] > 0         # sharing composes with drafting
+    assert eng.compile_count() == 1
+
+
+def test_engine_rejects_dynamic_knobs(global_m):
+    _, model, _ = global_m
+    for knob in (dict(prefix_cache=True), dict(prefill_chunk=4),
+                 dict(n_pages=32)):
+        with pytest.raises(ValueError, match="DynamicEngine"):
+            Engine(model, EngineConfig(**_DYN, **knob))
+
+
+def test_dynamic_rejects_unaligned_chunk(global_m):
+    _, model, _ = global_m
+    with pytest.raises(ValueError, match="multiple of page_size"):
+        DynamicEngine(model, EngineConfig(prefill_chunk=6, **_DYN))
