@@ -53,6 +53,8 @@ from repro.serving.engine import DynamicEngine, EngineConfig
 
 # benchmarks/run.py: merge run()'s dict into BENCH_serve.json["traffic"]
 MERGE_INTO = ("serve", "traffic")
+# ... and mirror that section to a repo-root headline file
+ROOT_SUMMARY = {"BENCH_TRAFFIC.json": "traffic"}
 
 PAGE, SLOTS, CHUNK = 4, 4, 8
 PMAX = 32

@@ -80,6 +80,14 @@ def main() -> None:
                             result[k] = old[k]
                 with open(path, "w") as f:
                     json.dump(result, f, indent=2)
+                # repo-root mirrors (ROOT_SUMMARY = {filename: key|None}):
+                # headline summaries live next to README for quick diffing,
+                # while experiments/ keeps the canonical per-bench files
+                for fname, key in getattr(mod, "ROOT_SUMMARY", {}).items():
+                    data = result if key is None else result.get(key)
+                    if data is not None:
+                        with open(fname, "w") as f:
+                            json.dump(data, f, indent=2)
         except Exception:
             failures += 1
             print(f"{name},0,FAILED", flush=True)

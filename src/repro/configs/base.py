@@ -84,6 +84,17 @@ class ModelConfig:
                                       # log-softmax CE instead of the chunked
                                       # ops.softmax_cross_entropy path
 
+    # ---- low precision (repro.quant) ---------------------------------------
+    # kv_dtype: paged-KV pool storage dtype for serving. "" inherits `dtype`;
+    # "int8" stores quantized blocks + per-page-per-head f32 scales (dequant
+    # happens in-kernel in decode_attention). Master weights stay f32 always.
+    kv_dtype: str = ""
+    # amp: mixed-precision matmul policy for the train step ("" = off,
+    # "bf16", "int8"); resolved via quant.policy_of into a QuantPolicy that
+    # routes the flash-attention and readout/CE matmuls. Safe under u-µP:
+    # unit-scale activations keep dynamic per-tile scales O(1).
+    amp: str = ""
+
     # ---- distributed-training tricks ---------------------------------------
     # "tp": TP over the model axis + FSDP (default, big models)
     # "dp": pure ZeRO-DP over every chip (right for sub-1B models; §Perf)
@@ -131,6 +142,10 @@ class ModelConfig:
         for f in ("d_model", "n_heads", "n_kv_heads", "d_head", "d_ff"):
             if getattr(self, f"base_{f}") is None:
                 object.__setattr__(self, f"base_{f}", getattr(self, f))
+        if self.kv_dtype not in ("", "int8", "bfloat16", "float32"):
+            raise ValueError(f"{self.name}: unknown kv_dtype {self.kv_dtype!r}")
+        if self.amp not in ("", "bf16", "int8"):
+            raise ValueError(f"{self.name}: unknown amp policy {self.amp!r}")
         ng, rem = divmod(self.n_layers - len(self.tail), max(len(self.pattern), 1))
         if rem != 0:
             raise ValueError(

@@ -48,11 +48,14 @@ def _decode_kernel(
     k_ref,        # (1, P, 1, d) — page picked by the index map via tab_ref
     v_ref,        # (1, P, 1, d)
     pos_ref,      # (1, P) int32 stored token positions of the page
-    o_ref,        # (1, 1, G, d)
-    acc_ref, m_ref, l_ref,
-    *, scale: float, window: int, softcap: float,
-    page: int, n_pages_per_slot: int,
+    *rest,        # [ks_ref, vs_ref (1, 1) — int8 pools only,] o_ref, scratch
+    scale: float, window: int, softcap: float,
+    page: int, n_pages_per_slot: int, kv_quant: bool = False,
 ):
+    if kv_quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        (o_ref, acc_ref, m_ref, l_ref), ks_ref, vs_ref = rest, None, None
     b = pl.program_id(0)
     j = pl.program_id(2)
     qp = qpos_ref[b]
@@ -73,6 +76,11 @@ def _decode_kernel(
         q = q_ref[0, 0, :, :].astype(jnp.float32)          # (G, d)
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # (P, d)
         v = v_ref[0, :, 0, :].astype(jnp.float32)          # (P, d)
+        if kv_quant:
+            # in-kernel dequant: int8 page · per-page-per-head f32 scale —
+            # the same math the ref oracle applies after its gather
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         pos = pos_ref[0, :]                                # (P,)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         if softcap:
@@ -109,10 +117,9 @@ def _decode_multi_kernel(
     k_ref,        # (1, P, 1, d) — page picked by the index map via tab_ref
     v_ref,        # (1, P, 1, d)
     pos_ref,      # (1, P) int32 stored token positions of the page
-    o_ref,        # (1, 1, T, G, d)
-    acc_ref, m_ref, l_ref,
-    *, scale: float, window: int, softcap: float,
-    page: int, n_pages_per_slot: int,
+    *rest,        # [ks_ref, vs_ref (1, 1) — int8 pools only,] o_ref, scratch
+    scale: float, window: int, softcap: float,
+    page: int, n_pages_per_slot: int, kv_quant: bool = False,
 ):
     """Multi-query (T > 1) variant of _decode_kernel for speculative verify.
 
@@ -122,6 +129,10 @@ def _decode_multi_kernel(
     causality comes for free — chunk entries carry their positions in the
     page pool by the time the kernel runs).
     """
+    if kv_quant:
+        ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref = rest
+    else:
+        (o_ref, acc_ref, m_ref, l_ref), ks_ref, vs_ref = rest, None, None
     b = pl.program_id(0)
     j = pl.program_id(2)
     qp = qpos_ref[b]                                       # (T,)
@@ -144,6 +155,9 @@ def _decode_multi_kernel(
         q = q_ref[0, 0].astype(jnp.float32).reshape(T * G, d)
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # (P, d)
         v = v_ref[0, :, 0, :].astype(jnp.float32)          # (P, d)
+        if kv_quant:
+            k = k * ks_ref[0, 0]
+            v = v * vs_ref[0, 0]
         pos = pos_ref[0, :]                                # (P,)
         s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
         if softcap:
@@ -187,9 +201,17 @@ def flash_decode(
     scale: float,
     window: int = 0,
     softcap: float = 0.0,
+    k_scale: jax.Array | None = None,   # (N, K) f32 — int8 pools
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Paged single-query flash attention; returns (B, H, d).
+
+    With ``k_scale``/``v_scale``, ``k_pages``/``v_pages`` hold int8 blocks
+    and each page is dequantized in-kernel (VMEM, right after the DMA the
+    page table routed) by its per-page-per-head scale — the scales ride the
+    same ``tab[b, j]`` index maps as the pages, so quantization is invisible
+    to the allocator and page tables.
 
     Inference-only (no custom_vjp — nothing backprops through serving).
     Use kernels.ops.decode_attention for the dispatching wrapper.
@@ -202,25 +224,34 @@ def flash_decode(
     qg = q.reshape(B, K, G, d)
     tab = jnp.clip(page_table, 0, N - 1).astype(jnp.int32)
     qp = q_pos.astype(jnp.int32)
+    kv_quant = k_scale is not None
 
     kernel = functools.partial(
         _decode_kernel,
         scale=scale, window=window, softcap=softcap,
-        page=P, n_pages_per_slot=C,
+        page=P, n_pages_per_slot=C, kv_quant=kv_quant,
     )
+    in_specs = [
+        pl.BlockSpec((1, 1, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0)),
+        pl.BlockSpec(
+            (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
+        ),
+        pl.BlockSpec(
+            (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
+        ),
+        pl.BlockSpec((1, P), lambda b, kh, j, tab, qp: (tab[b, j], 0)),
+    ]
+    args = [tab, qp, qg, k_pages, v_pages, pos_pages]
+    if kv_quant:
+        scale_spec = pl.BlockSpec(
+            (1, 1), lambda b, kh, j, tab, qp: (tab[b, j], kh)
+        )
+        in_specs += [scale_spec, scale_spec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, K, C),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0)),
-            pl.BlockSpec(
-                (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
-            ),
-            pl.BlockSpec(
-                (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
-            ),
-            pl.BlockSpec((1, P), lambda b, kh, j, tab, qp: (tab[b, j], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0)
         ),
@@ -235,7 +266,7 @@ def flash_decode(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, G, d), q.dtype),
         interpret=interpret,
-    )(tab, qp, qg, k_pages, v_pages, pos_pages)
+    )(*args)
     return out.reshape(B, H, d)
 
 
@@ -250,6 +281,8 @@ def flash_decode_multi(
     scale: float,
     window: int = 0,
     softcap: float = 0.0,
+    k_scale: jax.Array | None = None,   # (N, K) f32 — int8 pools
+    v_scale: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Paged multi-query flash attention (speculative verify / drafter
@@ -257,7 +290,8 @@ def flash_decode_multi(
 
     The T-token chunk must already be written into the pages (the engine
     writes before attending), so per-row position masking gives both the
-    history visibility and the chunk's internal causality.
+    history visibility and the chunk's internal causality.  Scales, when
+    given, dequantize int8 pages in-kernel exactly as in flash_decode.
     """
     B, T, H, d = q.shape
     N, P, K, _ = k_pages.shape
@@ -269,27 +303,36 @@ def flash_decode_multi(
     qg = q.reshape(B, T, K, G, d).transpose(0, 2, 1, 3, 4)
     tab = jnp.clip(page_table, 0, N - 1).astype(jnp.int32)
     qp = q_pos.astype(jnp.int32)
+    kv_quant = k_scale is not None
 
     kernel = functools.partial(
         _decode_multi_kernel,
         scale=scale, window=window, softcap=softcap,
-        page=P, n_pages_per_slot=C,
+        page=P, n_pages_per_slot=C, kv_quant=kv_quant,
     )
+    in_specs = [
+        pl.BlockSpec(
+            (1, 1, T, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0, 0)
+        ),
+        pl.BlockSpec(
+            (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
+        ),
+        pl.BlockSpec(
+            (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
+        ),
+        pl.BlockSpec((1, P), lambda b, kh, j, tab, qp: (tab[b, j], 0)),
+    ]
+    args = [tab, qp, qg, k_pages, v_pages, pos_pages]
+    if kv_quant:
+        scale_spec = pl.BlockSpec(
+            (1, 1), lambda b, kh, j, tab, qp: (tab[b, j], kh)
+        )
+        in_specs += [scale_spec, scale_spec]
+        args += [k_scale.astype(jnp.float32), v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, K, C),
-        in_specs=[
-            pl.BlockSpec(
-                (1, 1, T, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0, 0)
-            ),
-            pl.BlockSpec(
-                (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
-            ),
-            pl.BlockSpec(
-                (1, P, 1, d), lambda b, kh, j, tab, qp: (tab[b, j], 0, kh, 0)
-            ),
-            pl.BlockSpec((1, P), lambda b, kh, j, tab, qp: (tab[b, j], 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, 1, T, G, d), lambda b, kh, j, tab, qp: (b, kh, 0, 0, 0)
         ),
@@ -304,5 +347,5 @@ def flash_decode_multi(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, K, T, G, d), q.dtype),
         interpret=interpret,
-    )(tab, qp, qg, k_pages, v_pages, pos_pages)
+    )(*args)
     return out.transpose(0, 2, 1, 3, 4).reshape(B, T, H, d)

@@ -46,6 +46,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.quant.core import kernel_dot
+
 NEG_INF = -2.3819763e38
 
 
@@ -75,7 +77,7 @@ def _tile_mask(q_start, k_start, bq, bk, seq_len, causal: bool, window: int):
 def _flash_kernel(
     q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
     *, scale: float, causal: bool, window: int, softcap: float,
-    bq: int, bk: int, nk: int, seq_len: int,
+    bq: int, bk: int, nk: int, seq_len: int, policy=None,
 ):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
@@ -98,7 +100,7 @@ def _flash_kernel(
         q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, d)
         k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, d)
         v = v_ref[0, :, 0, :].astype(jnp.float32)          # (bk, d)
-        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = kernel_dot(q, k.T, policy) * scale
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
         mask = _tile_mask(q_start, k_start, bq, bk, seq_len, causal, window)
@@ -111,9 +113,7 @@ def _flash_kernel(
         p = jnp.exp(s - m_new)                              # (bq, bk)
         alpha = jnp.exp(m_prev - m_new)
         l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-            p, v, preferred_element_type=jnp.float32
-        )
+        acc_ref[...] = acc_ref[...] * alpha + kernel_dot(p, v, policy)
         m_ref[...] = m_new
         l_ref[...] = l_new
 
@@ -128,14 +128,16 @@ def _flash_kernel(
 
 def _recompute_p_ds(
     q, k, v, do, lse_row, delta_row, q_start, k_start,
-    *, scale, causal, window, softcap, bq, bk, seq_len,
+    *, scale, causal, window, softcap, bq, bk, seq_len, policy=None,
 ):
     """Shared backward tile math: recompute p and ds = dL/d(pre-cap logits).
 
     All inputs f32: q/do (bq, d), k/v (bk, d), lse_row/delta_row (bq, 1).
-    Returns (p, ds), both (bq, bk).
+    Returns (p, ds), both (bq, bk).  Matmuls (the q.kT recompute and dp =
+    do.vT) run under the mixed-precision policy — the recomputed logits use
+    the *same* quantized dot as the forward, so p matches the saved lse.
     """
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = kernel_dot(q, k.T, policy) * scale
     if softcap:
         t = jnp.tanh(s / softcap)
         s = softcap * t
@@ -144,7 +146,7 @@ def _recompute_p_ds(
     # entries are exp(NEG_INF - lse) = 0, written explicitly to avoid
     # overflow paths.
     p = jnp.where(mask, jnp.exp(s - lse_row), 0.0)
-    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    dp = kernel_dot(do, v.T, policy)
     ds = p * (dp - delta_row)
     if softcap:
         # d tanh-cap: derivative from the *pre-mask* tanh, finite everywhere;
@@ -156,7 +158,7 @@ def _recompute_p_ds(
 def _flash_bwd_dq_kernel(
     q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, acc_ref,
     *, scale: float, causal: bool, window: int, softcap: float,
-    bq: int, bk: int, nk: int, seq_len: int,
+    bq: int, bk: int, nk: int, seq_len: int, policy=None,
 ):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
@@ -180,9 +182,9 @@ def _flash_bwd_dq_kernel(
         _, ds = _recompute_p_ds(
             q, k, v, do, lse_row, delta_row, q_start, k_start,
             scale=scale, causal=causal, window=window, softcap=softcap,
-            bq=bq, bk=bk, seq_len=seq_len,
+            bq=bq, bk=bk, seq_len=seq_len, policy=policy,
         )
-        acc_ref[...] += jnp.dot(ds, k, preferred_element_type=jnp.float32)
+        acc_ref[...] += kernel_dot(ds, k, policy)
 
     @pl.when(ki == nk - 1)
     def _finalize():
@@ -193,7 +195,7 @@ def _flash_bwd_dkv_kernel(
     q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
     dk_acc_ref, dv_acc_ref,
     *, scale: float, causal: bool, window: int, softcap: float,
-    bq: int, bk: int, nq: int, n_group: int, seq_len: int,
+    bq: int, bk: int, nq: int, n_group: int, seq_len: int, policy=None,
 ):
     ki = pl.program_id(2)
     gi = pl.program_id(3)
@@ -219,10 +221,10 @@ def _flash_bwd_dkv_kernel(
         p, ds = _recompute_p_ds(
             q, k, v, do, lse_row, delta_row, q_start, k_start,
             scale=scale, causal=causal, window=window, softcap=softcap,
-            bq=bq, bk=bk, seq_len=seq_len,
+            bq=bq, bk=bk, seq_len=seq_len, policy=policy,
         )
-        dv_acc_ref[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
-        dk_acc_ref[...] += jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+        dv_acc_ref[...] += kernel_dot(p.T, do, policy)
+        dk_acc_ref[...] += kernel_dot(ds.T, q, policy)
 
     @pl.when(jnp.logical_and(gi == n_group - 1, qi == nq - 1))
     def _finalize():
@@ -234,7 +236,8 @@ def _flash_bwd_dkv_kernel(
 # pallas_call wrappers
 # ---------------------------------------------------------------------------
 
-def _fwd_call(q, k, v, *, scale, causal, window, softcap, bq, bk, interpret):
+def _fwd_call(q, k, v, *, scale, causal, window, softcap, bq, bk, interpret,
+              policy=None):
     B, S, H, d = q.shape
     T, K = k.shape[1], k.shape[2]
     G = H // K
@@ -242,7 +245,7 @@ def _fwd_call(q, k, v, *, scale, causal, window, softcap, bq, bk, interpret):
     kernel = functools.partial(
         _flash_kernel,
         scale=scale, causal=causal, window=window, softcap=softcap,
-        bq=bq, bk=bk, nk=nk, seq_len=T,
+        bq=bq, bk=bk, nk=nk, seq_len=T, policy=policy,
     )
     return pl.pallas_call(
         kernel,
@@ -271,7 +274,7 @@ def _fwd_call(q, k, v, *, scale, causal, window, softcap, bq, bk, interpret):
 
 def _bwd_dq_call(
     q, k, v, do, lse, delta, *, scale, causal, window, softcap, bq, bk,
-    interpret,
+    interpret, policy=None,
 ):
     B, S, H, d = q.shape
     T, K = k.shape[1], k.shape[2]
@@ -280,7 +283,7 @@ def _bwd_dq_call(
     kernel = functools.partial(
         _flash_bwd_dq_kernel,
         scale=scale, causal=causal, window=window, softcap=softcap,
-        bq=bq, bk=bk, nk=nk, seq_len=T,
+        bq=bq, bk=bk, nk=nk, seq_len=T, policy=policy,
     )
     return pl.pallas_call(
         kernel,
@@ -302,7 +305,7 @@ def _bwd_dq_call(
 
 def _bwd_dkv_call(
     q, k, v, do, lse, delta, *, scale, causal, window, softcap, bq, bk,
-    interpret,
+    interpret, policy=None,
 ):
     B, S, H, d = q.shape
     T, K = k.shape[1], k.shape[2]
@@ -311,7 +314,7 @@ def _bwd_dkv_call(
     kernel = functools.partial(
         _flash_bwd_dkv_kernel,
         scale=scale, causal=causal, window=window, softcap=softcap,
-        bq=bq, bk=bk, nq=nq, n_group=G, seq_len=T,
+        bq=bq, bk=bk, nq=nq, n_group=G, seq_len=T, policy=policy,
     )
     return pl.pallas_call(
         kernel,
@@ -349,15 +352,18 @@ def _bwd_dkv_call(
 # ---------------------------------------------------------------------------
 
 @functools.lru_cache(maxsize=None)
-def _flash_fn(scale, causal, window, softcap, bq, bk, interpret):
+def _flash_fn(scale, causal, window, softcap, bq, bk, interpret, policy=None):
     """A differentiable flash-attention closure for one static config.
 
     Cached so repeated calls with the same static config reuse one
-    custom_vjp instance (and its jaxpr cache entries).
+    custom_vjp instance (and its jaxpr cache entries).  ``policy`` (a
+    hashable quant.QuantPolicy) joins the cache key: changing precision
+    builds a different kernel closure, it never retraces an existing one —
+    that is the jit-stability contract of the mixed-precision policy.
     """
     kw = dict(
         scale=scale, causal=causal, window=window, softcap=softcap,
-        bq=bq, bk=bk, interpret=interpret,
+        bq=bq, bk=bk, interpret=interpret, policy=policy,
     )
 
     @jax.custom_vjp
@@ -396,10 +402,15 @@ def flash_attention(
     block_q: int = 128,
     block_k: int = 128,
     interpret: bool = False,
+    policy=None,
 ) -> jax.Array:
     """Pallas flash attention, differentiable (custom_vjp backward kernels);
     shapes must tile (S % block_q == 0 etc. after internal clamping).  Use
-    kernels.ops.attention for the auto-fallback wrapper."""
+    kernels.ops.attention for the auto-fallback wrapper.
+
+    ``policy`` routes every tile matmul (q.kT, p.v, and the dq/dk/dv
+    recompute matmuls) through quant.kernel_dot with per-tile dynamic
+    scales; master weights and the online-softmax state stay f32."""
     B, S, H, d = q.shape
     T, K = k.shape[1], k.shape[2]
     assert H % K == 0
@@ -408,6 +419,6 @@ def flash_attention(
     assert S % bq == 0 and T % bk == 0, (S, T, bq, bk)
     fn = _flash_fn(
         float(scale), bool(causal), int(window), float(softcap),
-        bq, bk, bool(interpret),
+        bq, bk, bool(interpret), policy,
     )
     return fn(q, k, v)

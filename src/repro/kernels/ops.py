@@ -82,13 +82,18 @@ def _reject_untileable(op: str, impl: str, requested: str, detail: str) -> None:
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "causal", "window", "softcap", "block_q", "block_k", "impl",
+        "causal", "window", "softcap", "block_q", "block_k", "impl", "policy",
     ),
 )
 def _attention_jit(
-    q, k, v, scale, *, causal, window, softcap, block_q, block_k, impl
+    q, k, v, scale, *, causal, window, softcap, block_q, block_k, impl, policy
 ):
     if impl == "ref":
+        if policy is not None and policy.active:
+            return ref.attention_policy_ref(
+                q, k, v, scale=scale, causal=causal, window=window,
+                softcap=softcap, policy=policy,
+            )
         return ref.attention_ref(
             q, k, v, scale=scale, causal=causal, window=window, softcap=softcap
         )
@@ -99,19 +104,25 @@ def _attention_jit(
     return fa.flash_attention(
         qs, k, v, scale=1.0, causal=causal, window=window, softcap=softcap,
         block_q=block_q, block_k=block_k, interpret=(impl == "interpret"),
+        policy=policy,
     )
 
 
 def attention(
     q, k, v, *, scale, causal: bool = True, window: int = 0,
     softcap: float = 0.0, block_q: int = 128, block_k: int = 128,
-    impl: str = "auto",
+    impl: str = "auto", policy=None,
 ):
     """Flash attention with GQA/causal/sliding-window/softcap.
 
     ``scale`` may be a traced scalar (the vmap sweep engine threads
     alpha_attn through it): the kernel path folds it into q ahead of the
     Pallas call, whose internal scale stays the compile-time constant 1.
+
+    ``policy`` (a quant.QuantPolicy, static) selects the matmul precision:
+    the kernel paths run each tile matmul through quant.kernel_dot with
+    per-tile dynamic scales; the ref path uses the straight-through
+    attention_policy_ref so the same dtype choices apply under every impl.
     """
     requested = impl
     impl = _resolve_impl(impl)
@@ -123,9 +134,11 @@ def attention(
             f"S={S}, T={T} vs blocks ({bq}, {bk})",
         )
         impl = "ref"
+    if policy is not None and not policy.active:
+        policy = None
     return _attention_jit(
         q, k, v, scale, causal=causal, window=window, softcap=softcap,
-        block_q=bq, block_k=bk, impl=impl,
+        block_q=bq, block_k=bk, impl=impl, policy=policy,
     )
 
 
@@ -136,12 +149,13 @@ def attention(
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "impl"))
 def _decode_attention_jit(
     q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
-    *, window, softcap, impl,
+    k_scale, v_scale, *, window, softcap, impl,
 ):
     if impl == "ref":
         return ref.decode_attention_ref(
             q, k_pages, v_pages, pos_pages, page_table, q_pos,
             scale=scale, window=window, softcap=softcap,
+            k_scale=k_scale, v_scale=v_scale,
         )
     # fold the (possibly traced) scale into q, as ops.attention does — the
     # kernel's internal scale stays the compile-time constant 1.
@@ -149,22 +163,28 @@ def _decode_attention_jit(
     return da.flash_decode(
         qs, k_pages, v_pages, pos_pages, page_table, q_pos,
         scale=1.0, window=window, softcap=softcap,
+        k_scale=k_scale, v_scale=v_scale,
         interpret=(impl == "interpret"),
     )
 
 
 def decode_attention(
     q, k_pages, v_pages, pos_pages, page_table, q_pos, *, scale,
-    window: int = 0, softcap: float = 0.0, impl: str = "auto",
+    window: int = 0, softcap: float = 0.0,
+    k_scale=None, v_scale=None, impl: str = "auto",
 ):
     """Flash-decode: single-query attention over a paged KV cache.
 
     ``q`` (B, H, d), pools (N, P, K, d) + (N, P) stored positions,
     ``page_table`` (B, C), ``q_pos`` (B,) (-1 = inactive slot -> zeros).
-    Pages are whole-block fetches — every shape tiles, no fallback needed.
+    With ``k_scale``/``v_scale`` ((N, K) f32) the pools hold int8 blocks,
+    dequantized in-kernel (or post-gather in the ref oracle) by their
+    per-page-per-head scales.  Pages are whole-block fetches — every shape
+    tiles, no fallback needed.
     """
     return _decode_attention_jit(
         q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
+        k_scale, v_scale,
         window=window, softcap=softcap, impl=_resolve_impl(impl),
     )
 
@@ -176,24 +196,27 @@ def decode_attention(
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "impl"))
 def _decode_attention_multi_jit(
     q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
-    *, window, softcap, impl,
+    k_scale, v_scale, *, window, softcap, impl,
 ):
     if impl == "ref":
         return ref.decode_attention_multi_ref(
             q, k_pages, v_pages, pos_pages, page_table, q_pos,
             scale=scale, window=window, softcap=softcap,
+            k_scale=k_scale, v_scale=v_scale,
         )
     qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
     return da.flash_decode_multi(
         qs, k_pages, v_pages, pos_pages, page_table, q_pos,
         scale=1.0, window=window, softcap=softcap,
+        k_scale=k_scale, v_scale=v_scale,
         interpret=(impl == "interpret"),
     )
 
 
 def decode_attention_multi(
     q, k_pages, v_pages, pos_pages, page_table, q_pos, *, scale,
-    window: int = 0, softcap: float = 0.0, impl: str = "auto",
+    window: int = 0, softcap: float = 0.0,
+    k_scale=None, v_scale=None, impl: str = "auto",
 ):
     """Multi-query flash-decode: a T-token chunk per slot attends over the
     paged KV cache (speculative-decoding verify and drafter catch-up).
@@ -203,9 +226,12 @@ def decode_attention_multi(
     zeros).  The chunk must already be written into the pages; per-row
     position masking then yields history visibility and intra-chunk
     causality.  Pages are whole-block fetches — every shape tiles.
+    ``k_scale``/``v_scale`` select the int8-pool dequant path, as in
+    decode_attention.
     """
     return _decode_attention_multi_jit(
         q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
+        k_scale, v_scale,
         window=window, softcap=softcap, impl=_resolve_impl(impl),
     )
 

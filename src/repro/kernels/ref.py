@@ -43,6 +43,64 @@ def attention_ref(
     return out.reshape(B, S, H, d).astype(q.dtype)
 
 
+def attention_policy_ref(
+    q: jax.Array,          # (B, S, H, d)
+    k: jax.Array,          # (B, T, K, d)
+    v: jax.Array,          # (B, T, K, d)
+    *,
+    scale: float,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    policy=None,
+) -> jax.Array:
+    """attention_ref with the q·kᵀ and p·v matmuls routed through the
+    mixed-precision policy (repro.quant.quant_matmul) — the CPU/ref-impl
+    realization of the same dtype choices the Pallas kernels make per tile.
+
+    Differentiable: quant_matmul is a straight-through custom_vjp whose
+    backward matmuls run under the same policy, so ref-impl training on CPU
+    exercises genuinely quantized forward *and* backward matmuls (coord
+    checks and loss-parity tests measure the real policy, not f32).
+    """
+    from repro.quant.core import quant_matmul
+
+    B, S, H, d = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    kf = jnp.repeat(k, G, axis=2)                       # (B, T, H, d)
+    vf = jnp.repeat(v, G, axis=2)
+    qt = q.transpose(0, 2, 1, 3).astype(jnp.float32)    # (B, H, S, d)
+    kt = kf.transpose(0, 2, 3, 1).astype(jnp.float32)   # (B, H, d, T)
+    vt = vf.transpose(0, 2, 1, 3).astype(jnp.float32)   # (B, H, T, d)
+    mm = jax.vmap(jax.vmap(lambda a, b: quant_matmul(a, b, policy)))
+    logits = mm(qt, kt) * scale                         # (B, H, S, T)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    q_idx = jnp.arange(S)[:, None]
+    k_idx = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= k_idx <= q_idx
+    if window:
+        mask &= (q_idx - k_idx) < window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = mm(p, vt)                                     # (B, H, S, d)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def _gather_kv(k_pages, v_pages, tab, k_scale, v_scale):
+    """Gather pages to f32 (B, C, P, K, d) bands, dequantizing int8 pools
+    with their per-page-per-head scales when given."""
+    k = k_pages[tab].astype(jnp.float32)
+    v = v_pages[tab].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[tab][:, :, None, :, None]
+        v = v * v_scale[tab][:, :, None, :, None]
+    return k, v
+
+
 def decode_attention_ref(
     q: jax.Array,            # (B, H, d) — one query per decode slot
     k_pages: jax.Array,      # (N, P, K, d) — paged KV pool
@@ -54,6 +112,8 @@ def decode_attention_ref(
     scale,
     window: int = 0,
     softcap: float = 0.0,
+    k_scale=None,            # (N, K) f32 per-page-per-head scales (int8 pools)
+    v_scale=None,
 ) -> jax.Array:
     """Single-query attention over a paged KV cache (the flash-decode oracle).
 
@@ -62,14 +122,20 @@ def decode_attention_ref(
     and (windowed) q_pos - pos < window.  Fully-masked rows (inactive slots,
     q_pos = -1) return exact zeros — same contract as the Pallas kernel,
     whose running denominator stays 0 for such rows.
+
+    With ``k_scale``/``v_scale`` the pools hold int8 blocks: entries are
+    dequantized after the gather with the same f32 math the kernel uses
+    in-VMEM (``int8 · per-page-per-head scale``), so kernel-vs-ref stays in
+    the tight tolerance tier even on quantized pools.
     """
     B, H, d = q.shape
     N, P, K, _ = k_pages.shape
     C = page_table.shape[1]
     G = H // K
     tab = jnp.clip(page_table, 0, N - 1)
-    k = k_pages[tab].reshape(B, C * P, K, d).astype(jnp.float32)
-    v = v_pages[tab].reshape(B, C * P, K, d).astype(jnp.float32)
+    k, v = _gather_kv(k_pages, v_pages, tab, k_scale, v_scale)
+    k = k.reshape(B, C * P, K, d)
+    v = v.reshape(B, C * P, K, d)
     pos = pos_pages[tab].reshape(B, C * P)
     mask = (pos >= 0) & (pos <= q_pos[:, None])
     if window:
@@ -98,6 +164,8 @@ def decode_attention_multi_ref(
     scale,
     window: int = 0,
     softcap: float = 0.0,
+    k_scale=None,            # (N, K) f32 per-page-per-head scales (int8 pools)
+    v_scale=None,
 ) -> jax.Array:
     """Multi-query paged attention (the speculative verify/catch-up oracle).
 
@@ -115,8 +183,9 @@ def decode_attention_multi_ref(
     C = page_table.shape[1]
     G = H // K
     tab = jnp.clip(page_table, 0, N - 1)
-    k = k_pages[tab].reshape(B, C * P, K, d).astype(jnp.float32)
-    v = v_pages[tab].reshape(B, C * P, K, d).astype(jnp.float32)
+    k, v = _gather_kv(k_pages, v_pages, tab, k_scale, v_scale)
+    k = k.reshape(B, C * P, K, d)
+    v = v.reshape(B, C * P, K, d)
     pos = pos_pages[tab].reshape(B, C * P)
     mask = (pos[:, None, :] >= 0) & (pos[:, None, :] <= q_pos[:, :, None])
     if window:

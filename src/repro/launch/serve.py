@@ -35,7 +35,7 @@ from repro.distributed.sharding import make_rules, shardings as sharding_ctx
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import build_model
 from repro.serving.engine import DynamicEngine, Engine, EngineConfig
-from repro.serving.kv_cache import SERVABLE_KINDS, pool_bytes
+from repro.serving.kv_cache import SERVABLE_KINDS, kv_dtype_of, pool_bytes
 
 
 def generate(
@@ -159,6 +159,14 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="global page-pool size override (dynamic engine "
                          "only; default: n_slots * pages-per-slot)")
+    ap.add_argument("--kv-dtype", default="",
+                    choices=["", "int8", "bfloat16", "float32"],
+                    help="paged KV pool dtype; int8 stores per-page-per-head "
+                         "scaled blocks dequantized in-kernel (~2x the pages "
+                         "per byte; see docs/quantization.md)")
+    ap.add_argument("--adaptive-draft", action="store_true",
+                    help="adapt per-slot draft length from measured "
+                         "acceptance (dynamic engine + --draft-width)")
     ap.add_argument("--dense", action="store_true",
                     help="force the dense per-token-loop driver")
     ap.add_argument("--mixed-lens", action="store_true",
@@ -168,7 +176,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    cfg = cfg.replace(dtype="float32")
+    cfg = cfg.replace(dtype="float32", kv_dtype=args.kv_dtype)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 
@@ -211,9 +219,12 @@ def main(argv=None):
               f"{dcfg.n_heads} heads, draft_k={args.draft_k}")
 
     if args.static and (args.prefix_cache or args.prefill_chunk
+                        or args.adaptive_draft
                         or args.pool_pages is not None):
-        ap.error("--prefix-cache/--prefill-chunk/--pool-pages need the "
-                 "dynamic engine (drop --static)")
+        ap.error("--prefix-cache/--prefill-chunk/--pool-pages/"
+                 "--adaptive-draft need the dynamic engine (drop --static)")
+    if args.adaptive_draft and not speculate:
+        ap.error("--adaptive-draft needs a drafter (set --draft-width)")
 
     t0 = time.time()
     with sharding_ctx(mesh, rules):
@@ -226,13 +237,15 @@ def main(argv=None):
                 prefix_cache=args.prefix_cache,
                 prefill_chunk=args.prefill_chunk,
                 n_pages=args.pool_pages,
+                adaptive_draft=args.adaptive_draft,
             )
             engine = (
                 Engine(model, ecfg, draft_model=draft_model) if args.static
                 else DynamicEngine(model, ecfg, draft_model=draft_model)
             )
             n_global = getattr(engine, "n_pages", None)
-            print(f"[serve] paged KV pools: {pool_bytes(cfg, engine.spec)/2**20:.1f} MiB "
+            print(f"[serve] paged KV pools ({kv_dtype_of(cfg)}): "
+                  f"{pool_bytes(cfg, engine.spec)/2**20:.1f} MiB "
                   f"({engine.spec.n_slots} slots x {engine.spec.gp_cols} global"
                   + (f" + {engine.spec.wp_cols} ring" if engine.spec.wp_cols else "")
                   + f" pages of {engine.spec.page_size} tokens"

@@ -156,11 +156,17 @@ def main(argv=None):
     ap.add_argument("--simulate-failure", type=int, default=None)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--amp", default="", choices=["", "bf16", "int8"],
+                    help="mixed-precision matmul policy (attention q·k/p·v "
+                         "+ their backward + readout logits); master weights "
+                         "and optimizer state stay f32 — safe under u-µP "
+                         "unit scaling (see docs/quantization.md)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    cfg = cfg.replace(parametrization=args.parametrization, dtype="float32")
+    cfg = cfg.replace(parametrization=args.parametrization, dtype="float32",
+                      amp=args.amp)
     if args.width:
         cfg = cfg.scaled(args.width)
     hps = HParams(lr=args.lr, sigma=args.sigma)

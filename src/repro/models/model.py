@@ -18,6 +18,7 @@ import jax.numpy as jnp
 from repro.core.init import init_params
 from repro.core.meta import ParamMeta
 from repro.kernels import ops
+from repro import quant
 from repro.core.parametrization import AbcParametrization, Role, resolve
 from repro.distributed.sharding import shard
 from repro.models import attention as attn_lib
@@ -124,10 +125,20 @@ class Model:
         if cfg.tie_embeddings:
             view = _readout_view_meta(cfg)
             m = alpha * mult_of(view, self.p13n)
-            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+            w = params["embed"].T
         else:
             m = alpha * mult_of(self.meta["unembed"], self.p13n)
-            logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+            w = params["unembed"]
+        if cfg.amp:
+            # CE logit matmul under the mixed-precision policy: a
+            # straight-through scaled matmul (per-row x / per-column w
+            # dynamic scales for int8); master weights stay f32.
+            logits = quant.quant_matmul(
+                x.astype(jnp.float32), w.astype(jnp.float32),
+                quant.policy_of(cfg),
+            )
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
         logits = logits.astype(jnp.float32) * jnp.asarray(m, jnp.float32)
         logits = softcap(logits, cfg.final_softcap)
         return shard(logits, "batch", "seq", "vocab")

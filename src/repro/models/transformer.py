@@ -38,6 +38,7 @@ from repro.models.layers import (
     wmeta,
 )
 from repro.models.rope import apply_rope
+from repro import quant
 from repro.serving import kv_cache as paged_kv
 
 ATTN_KINDS = ("attn", "local", "cross", "moe", "local_moe", "dec")
@@ -207,7 +208,7 @@ def _self_attention(
                 )
         S = x.shape[1]
         acc = jnp.bfloat16 if cfg.attn_acc == "bfloat16" else jnp.float32
-        if cfg.use_pallas and ctx.aligned_positions:
+        if (cfg.use_pallas or cfg.amp) and ctx.aligned_positions:
             # Pallas flash attention (forward + custom_vjp backward kernels)
             # via the ops dispatcher: pallas on TPU, jnp ref elsewhere.
             # Gated on aligned_positions: the kernel masks by iota, which
@@ -216,9 +217,11 @@ def _self_attention(
             # `scale` may be traced (sweep-engine alpha_attn); ops folds it
             # into q.  NOTE: the kernel always accumulates in f32 —
             # cfg.attn_acc="bfloat16" applies to the jnp paths below only.
+            # cfg.amp also routes through here so the mixed-precision policy
+            # applies under every impl (ref uses attention_policy_ref).
             out = ops_lib.attention(
                 q, k, v, scale=scale, causal=ctx.causal, window=window,
-                softcap=cfg.attn_softcap,
+                softcap=cfg.attn_softcap, policy=quant.policy_of(cfg),
             )
         elif S > cfg.attn_chunk:
             # q-chunked: bounded-memory attention for long sequences
@@ -245,17 +248,20 @@ def _self_attention(
         # ops folds it into q.  S > 1 is the speculative verify chunk /
         # drafter catch-up: the chunk was just written into the pages above,
         # so per-row position masking gives intra-chunk causality too.
+        kv_scales = dict(
+            k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale")
+        )
         if S == 1:
             out = ops_lib.decode_attention(
                 q[:, 0], new_cache["k"], new_cache["v"], new_cache["pos"],
                 table, ctx.positions[:, 0], scale=scale, window=window,
-                softcap=cfg.attn_softcap,
+                softcap=cfg.attn_softcap, **kv_scales,
             )[:, None]
         else:
             out = ops_lib.decode_attention_multi(
                 q, new_cache["k"], new_cache["v"], new_cache["pos"],
                 table, ctx.positions, scale=scale, window=window,
-                softcap=cfg.attn_softcap,
+                softcap=cfg.attn_softcap, **kv_scales,
             )
     else:  # decode, dense position-tagged cache
         new_cache = attn_lib.cache_write(cache, k, v, ctx.positions, bool(window))

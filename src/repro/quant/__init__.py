@@ -1,0 +1,44 @@
+"""Low-precision subsystem: dtype policy, quantize/dequantize primitives,
+and per-page / per-tile scale management.
+
+Three consumers, one owner:
+
+  - **serving** (`repro.serving.kv_cache` + `repro.kernels.decode_attention`):
+    int8 paged K/V pools with per-page-per-head f32 scales (`kv.pack_kv`,
+    `kv.abs_scale`), dequantized in-kernel next to the page-table gather.
+  - **training** (`repro.kernels.flash_attention`, `repro.models.model`):
+    a `QuantPolicy` selecting bf16 or fp8-style scaled-int8 matmuls inside
+    the existing custom_vjps, with per-tile dynamic scales (`core.kernel_dot`)
+    and a straight-through scaled matmul for the readout/CE logit path
+    (`core.quant_matmul`).
+  - **dispatch/config** (`repro.kernels.ops`, `repro.configs`): the policy
+    and `kv_dtype` knobs ride the house auto/pallas/interpret/ref contract.
+
+Why u-µP licenses this: unit-scale activations (Blake et al. 2024) keep
+every matmul operand O(1), so dynamic per-row/per-page scales sit near 1
+and int8's 8-bit mantissa budget is spent on signal, not on absorbing
+width-dependent drift.  See docs/quantization.md.
+"""
+from repro.quant.core import (
+    INT8_MAX,
+    dequantize_int8,
+    kernel_dot,
+    quant_matmul,
+    quantize_int8,
+)
+from repro.quant.kv import abs_scale, pack_kv, quantize_with, unpack_kv
+from repro.quant.policy import QuantPolicy, policy_of
+
+__all__ = [
+    "INT8_MAX",
+    "QuantPolicy",
+    "abs_scale",
+    "dequantize_int8",
+    "kernel_dot",
+    "pack_kv",
+    "quantize_with",
+    "policy_of",
+    "quant_matmul",
+    "quantize_int8",
+    "unpack_kv",
+]

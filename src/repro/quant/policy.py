@@ -1,0 +1,56 @@
+"""Mixed-precision policy: a jit-stable pytree selecting matmul dtypes.
+
+``QuantPolicy`` is a frozen dataclass registered as a *leafless* pytree —
+every field is auxiliary data, so the same instance works both as a
+``static_argnames`` value (it is hashable) and inside traced pytrees
+(flatten yields no leaves, so it never becomes a tracer).  It joins the
+``lru_cache`` key of the flash-attention ``custom_vjp`` factory, which is
+what makes the policy jit-stable: changing the policy builds a different
+kernel, it never retraces an existing one.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+_AMP_MODES = ("none", "bf16", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """What precision the hot matmuls run in.
+
+    ``matmul``: ``"none"`` (full f32, the default), ``"bf16"`` (operands
+    cast to bf16, f32 accumulation), or ``"int8"`` (fp8-style scaled-int8:
+    per-row/per-column dynamic scales computed at the tile, int32
+    accumulation, f32 rescale).  Applies to the flash-attention tile
+    matmuls (q·kᵀ, p·v and their dq/dk/dv recompute counterparts) and the
+    readout/CE logit matmul.  Master weights and optimizer state are
+    always f32 — the policy only touches matmul operands.
+    """
+
+    matmul: str = "none"
+
+    def __post_init__(self) -> None:
+        if self.matmul not in _AMP_MODES:
+            raise ValueError(
+                f"QuantPolicy.matmul must be one of {_AMP_MODES}, got {self.matmul!r}"
+            )
+
+    @property
+    def active(self) -> bool:
+        return self.matmul != "none"
+
+
+jax.tree_util.register_pytree_node(
+    QuantPolicy,
+    lambda p: ((), p),
+    lambda aux, _: aux,
+)
+
+
+def policy_of(cfg) -> QuantPolicy:
+    """Resolve a model config's ``amp`` knob into a :class:`QuantPolicy`."""
+    amp = getattr(cfg, "amp", "") or "none"
+    return QuantPolicy(matmul=amp)

@@ -102,6 +102,8 @@ class EngineConfig:
     #                              tokens (page_size multiple); 0 = one-shot
     n_pages: Optional[int] = None        # global pool size override
     n_window_pages: Optional[int] = None  # window pool size override
+    adaptive_draft: bool = False  # per-slot draft length from measured
+    #                               acceptance (host control; needs draft_k)
 
 
 class Engine:
@@ -116,12 +118,12 @@ class Engine:
 
     def __init__(self, model, ecfg: EngineConfig = EngineConfig(),
                  draft_model=None):
-        if ecfg.prefix_cache or ecfg.prefill_chunk or (
+        if ecfg.prefix_cache or ecfg.prefill_chunk or ecfg.adaptive_draft or (
             ecfg.n_pages is not None or ecfg.n_window_pages is not None
         ):
             raise ValueError(
-                "prefix_cache / prefill_chunk / n_pages / n_window_pages "
-                "need the dynamic allocator — use DynamicEngine"
+                "prefix_cache / prefill_chunk / n_pages / n_window_pages / "
+                "adaptive_draft need the dynamic engine — use DynamicEngine"
             )
         # lookahead: speculative chunks write up to draft_k positions ahead
         # of the earliest query in the same forward — the windowed ring must
@@ -372,7 +374,18 @@ class Engine:
         }
 
     def _decode_spec_body(self, params, draft_params, queue, base_key, st,
-                          gtable, wtable):
+                          gtable, wtable, k_eff=None):
+        """One speculative decode iteration (draft -> verify -> accept).
+
+        ``k_eff`` ((S,) int32 in [1, draft_k], traced) truncates each
+        slot's draft chain without recompiling: draft positions >= k_eff
+        are force-rejected in spec_accept AND their q rows zeroed (the
+        residual then degenerates to the plain target draw — unbiased),
+        their drafter/target cache writes are position-masked to -1
+        (scatter-dropped), and ``proposed`` counts only min(dk, k_eff).
+        The drafter still runs dk scan iterations — fixed shapes, one
+        compiled program — it just drafts into masked-out positions.
+        """
         model, spec = self.model, self.spec
         S = spec.n_slots
         Gmax = self.ecfg.max_gen_len
@@ -383,6 +396,10 @@ class Engine:
         req = st["slot_req"]
         t, tk, tp = self._req_params(queue, req)
         joff = jnp.arange(dk + 1, dtype=jnp.int32)
+        k_used = (
+            jnp.full((S,), dk, jnp.int32) if k_eff is None
+            else jnp.clip(k_eff, 1, dk)
+        )
         dpaged = kv_cache.PagedState(
             global_table=self.dgtable, window_table=self.dwtable,
             active=active, page_size=self.dspec.page_size,
@@ -409,7 +426,7 @@ class Engine:
             # the last feed's logits go unused but keep the scan body
             # uniform, and its cache entry saves next iteration's
             # catch-up from a hole when everything is accepted.
-            dposj = jnp.where(active, pos + 1 + j, -1)[:, None]
+            dposj = jnp.where(active & (j < k_used), pos + 1 + j, -1)[:, None]
             nlog, dpools = self.draft_model.forward(
                 draft_params, shard(dj[:, None], "slots", None),
                 positions=dposj, mode="decode", cache=dpools,
@@ -423,6 +440,12 @@ class Engine:
         )
         drafts = drafts_j.T                  # (S, dk)
         q_dist = jnp.moveaxis(q_j, 0, 1)     # (S, dk, V)
+        jmask = None
+        if k_eff is not None:
+            # truncate the chain at k_used: zero the q rows past it so the
+            # forced rejection's residual is exactly p (see spec_accept)
+            jmask = joff[None, :dk] < k_used[:, None]          # (S, dk)
+            q_dist = jnp.where(jmask[..., None], q_dist, 0.0)
 
         # --- verify: ONE (dk+1)-token target forward ---
         # [y_pos, d_0 .. d_{dk-1}] at positions pos .. pos+dk; logits
@@ -432,7 +455,10 @@ class Engine:
         tokens_v = jnp.concatenate(
             [st["slot_last"][:, None], drafts], axis=1
         )
-        vpos = jnp.where(active[:, None], pos[:, None] + joff[None], -1)
+        vpos = jnp.where(
+            active[:, None] & (joff[None] <= k_used[:, None]),
+            pos[:, None] + joff[None], -1,
+        )
         paged = kv_cache.PagedState(
             global_table=gtable, window_table=wtable,
             active=active, page_size=spec.page_size,
@@ -455,7 +481,7 @@ class Engine:
             base_key, pos[:, None] + joff[None], req, _TAG_SAMPLE
         )
         n_acc, extra = sampling.spec_accept(
-            p_dist, q_dist, drafts, akeys, skeys
+            p_dist, q_dist, drafts, akeys, skeys, accept_mask=jmask
         )
         n_acc = jnp.where(active, n_acc, 0)
 
@@ -489,7 +515,7 @@ class Engine:
             full_ctx, m[:, None] + joff[None], axis=1
         )
         upd = active & (m > 0)
-        return {
+        out = {
             **st,
             "active": active & ~finished,
             "slot_pos": pos + m,
@@ -503,8 +529,13 @@ class Engine:
             "accepted": st["accepted"]
             + jnp.sum(jnp.where(active, n_acc, 0)),
             "proposed": st["proposed"]
-            + jnp.sum(jnp.where(active, dk, 0)),
+            + jnp.sum(jnp.where(active, k_used, 0)),
         }
+        if "last_acc" in st:
+            # per-slot telemetry for the host's adaptive-draft controller
+            out["last_acc"] = jnp.where(active, n_acc, 0)
+            out["last_prop"] = jnp.where(active, k_used, 0)
+        return out
 
     def _run(self, params, draft_params, queue: Dict[str, Any]):
         cfg, spec = self.model.cfg, self.spec
@@ -625,6 +656,11 @@ class DynamicEngine(Engine):
                 f"prefill_chunk must be a multiple of page_size "
                 f"({ecfg.page_size}), got {C}"
             )
+        if ecfg.adaptive_draft and ecfg.draft_k < 1:
+            raise ValueError(
+                "adaptive_draft adapts the speculative draft length — it "
+                f"needs draft_k >= 1 (got draft_k={ecfg.draft_k})"
+            )
         # chunk forwards write up to chunk_len - 1 positions ahead of their
         # earliest query — the windowed ring needs the same lookahead margin
         # as speculative verify chunks (kv_cache.build_spec)
@@ -686,6 +722,12 @@ class DynamicEngine(Engine):
         if self.spec.wp_cols:
             ctrl["inval_w"] = np.full(
                 (self.spec.wp_cols,), self.n_window_pages, np.int32
+            )
+        if self.ecfg.adaptive_draft:
+            # per-slot effective draft length; the host controller rewrites
+            # it between steps — traced data, so adaptation never recompiles
+            ctrl["draft_k"] = np.full(
+                (self.spec.n_slots,), self.ecfg.draft_k, np.int32
             )
         return ctrl
 
@@ -766,9 +808,12 @@ class DynamicEngine(Engine):
         st = jax.lax.cond(ctrl["admit_chunk"], admit_chunk, lambda s: s, st)
 
         if self.draft_model is not None:
+            k_eff = ctrl.get("draft_k")
+
             def dec(s):
                 return self._decode_spec_body(
-                    params, draft_params, queue, base_key, s, gtable, wtable
+                    params, draft_params, queue, base_key, s, gtable, wtable,
+                    k_eff=k_eff,
                 )
         else:
             def dec(s):
@@ -781,6 +826,9 @@ class DynamicEngine(Engine):
             "slot_ntok": st["slot_ntok"],
             "out_len": st["out_len"],
         }
+        if "last_acc" in st:
+            info["last_acc"] = st["last_acc"]
+            info["last_prop"] = st["last_prop"]
         return st, info
 
     # ------------------------------------------------------------------
@@ -849,6 +897,17 @@ class DynamicEngine(Engine):
         if self.draft_model is not None:
             st["dpools"] = self._dpools
             st["slot_ctx"] = jnp.zeros((S, self.ecfg.draft_k + 1), jnp.int32)
+            if self.ecfg.adaptive_draft:
+                st["last_acc"] = jnp.zeros((S,), jnp.int32)
+                st["last_prop"] = jnp.zeros((S,), jnp.int32)
+
+        # adaptive-draft controller state: per-slot acceptance-rate EMA
+        # drives the next step's effective draft length (pure host control —
+        # ctrl["draft_k"] is traced data, so adapting never recompiles)
+        adaptive = self.ecfg.adaptive_draft
+        dk0 = self.ecfg.draft_k
+        k_cur = np.full((S,), dk0, np.int32)
+        acc_ema = np.full((S,), 0.5, np.float64)
 
         pending = list(range(R))
         free = list(range(S))
@@ -935,6 +994,8 @@ class DynamicEngine(Engine):
                         finishing, cur = cur, None
                     else:
                         cur["i"] += 1
+            if adaptive:
+                ctrl["draft_k"] = k_cur.copy()
             tables = {"g": jnp.asarray(self._gtab)}
             if self._wtab is not None:
                 tables["w"] = jnp.asarray(self._wtab)
@@ -956,11 +1017,27 @@ class DynamicEngine(Engine):
                     [tnow] * int(new_len[r] - prev_len[r])
                 )
             prev_len = new_len
+            if adaptive:
+                # EMA of the per-slot acceptance rate steers k: confident
+                # drafters earn longer chains, struggling ones shorter —
+                # speculation stays profitable per slot, not on average
+                la = np.asarray(info["last_acc"], np.int64)
+                lp = np.asarray(info["last_prop"], np.int64)
+                stepped = lp > 0
+                rate = la[stepped] / lp[stepped]
+                acc_ema[stepped] = 0.8 * acc_ema[stepped] + 0.2 * rate
+                grow = stepped & (acc_ema > 0.8)
+                shrink = stepped & (acc_ema < 0.4)
+                k_cur[grow] = np.minimum(k_cur[grow] + 1, dk0)
+                k_cur[shrink] = np.maximum(k_cur[shrink] - 1, 1)
             for slot in sorted(occupied):
                 if not bool(info["active"][slot]):
                     self.blocks.retire(slot)
                     del occupied[slot]
                     free.append(slot)
+                    if adaptive:     # next occupant starts from scratch
+                        k_cur[slot] = dk0
+                        acc_ema[slot] = 0.5
             if steps > max_steps:
                 raise RuntimeError(
                     f"dynamic engine exceeded {max_steps} steps — "

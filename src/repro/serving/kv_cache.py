@@ -14,6 +14,18 @@ in the repeated group are stacked over ``n_groups`` on a leading axis, so
 the pool pytree drops into ``run_stack``'s scan exactly like the dense
 cache.
 
+With ``cfg.kv_dtype == "int8"`` the k/v leaves store quantized blocks and
+the pool gains two f32 scale leaves ``{"k_scale", "v_scale"}: (N, K)`` —
+one absmax/127 scale per page per kv head (see ``repro.quant.kv``).  A
+page's scale only grows while the page is live: every write scatter-maxes
+the new tokens' scales into the page, requantizes the page's existing
+int8 bytes when the scale grew (round(int · old/new) — exact identity
+when it didn't), then writes the new tokens at the final scale.
+Invalidation zeroes the scale with the same scatter that clears ``pos``.
+Scales are indexed by the same physical page id as the payload, so
+page-table indirection (prefix sharing, eviction, re-admission) moves
+both or neither — the allocator never learns quantization exists.
+
 Indirection is by *page table*: slot ``s``'s logical page ``j`` lives at
 physical page ``table[s, j]``.  Global layers give each slot
 ``ceil(max_total / P)`` logical pages; sliding-window layers give
@@ -43,12 +55,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.sharding import shard
+from repro.quant.core import INT8_MAX
 
 # block kinds the paged engine can serve (self-attention KV caches only;
 # recurrent/ssd/cross-attention states need their own slot caches)
 SERVABLE_KINDS = ("attn", "local", "moe", "local_moe")
 
-_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+_DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32, "int8": jnp.int8}
+
+_SCALE_EPS = 1e-12
+
+
+def kv_dtype_of(cfg) -> str:
+    """Resolved pool storage dtype name: ``cfg.kv_dtype`` overrides
+    ``cfg.dtype`` when set (the activation dtype stays untouched)."""
+    return getattr(cfg, "kv_dtype", "") or cfg.dtype
 
 
 def _windowed(kind: str) -> bool:
@@ -154,15 +175,20 @@ def init_pools(
     outlive their slot.
     """
     K, hd = cfg.n_kv_heads, cfg.d_head
-    dtype = _DTYPES[cfg.dtype]
+    kv_name = kv_dtype_of(cfg)
+    dtype = _DTYPES[kv_name]
 
     def pool(n_pages, stacked):
         lead = (cfg.n_groups,) if stacked else ()
-        return {
+        p = {
             "k": jnp.zeros((*lead, n_pages, spec.page_size, K, hd), dtype),
             "v": jnp.zeros((*lead, n_pages, spec.page_size, K, hd), dtype),
             "pos": jnp.full((*lead, n_pages, spec.page_size), -1, jnp.int32),
         }
+        if kv_name == "int8":
+            p["k_scale"] = jnp.zeros((*lead, n_pages, K), jnp.float32)
+            p["v_scale"] = jnp.zeros((*lead, n_pages, K), jnp.float32)
+        return p
 
     def n_pages(kind):
         if _windowed(kind):
@@ -184,13 +210,16 @@ def init_pools(
 def pool_bytes(cfg, spec: PagedSpec) -> int:
     """Total paged-pool footprint (all layers), for logging/benchmarks."""
     K, hd = cfg.n_kv_heads, cfg.d_head
-    itemsize = jnp.dtype(_DTYPES[cfg.dtype]).itemsize
-    per_tok = K * hd * 2 * itemsize + 4
+    kv_name = kv_dtype_of(cfg)
+    itemsize = jnp.dtype(_DTYPES[kv_name]).itemsize
+    per_page = spec.page_size * (K * hd * 2 * itemsize + 4)
+    if kv_name == "int8":
+        per_page += 2 * K * 4      # per-page-per-head f32 scales (k + v)
     kinds = [k for k in cfg.pattern for _ in range(cfg.n_groups)] + list(cfg.tail)
     tot = 0
     for kind in kinds:
         n = spec.n_window_pages if _windowed(kind) else spec.n_global_pages
-        tot += n * spec.page_size * per_tok
+        tot += n * per_page
     return tot
 
 
@@ -232,12 +261,56 @@ def paged_cache_write(
     page = jnp.take_along_axis(table, col, axis=1)      # (B, T)
     page = jnp.where(ok & active[:, None], page, N)
     off = safe % page_size
+    p = cache["pos"].at[page, off].set(pos)
+    if "k_scale" in cache:
+        k, ks = _quantized_write(cache["k"], cache["k_scale"], k_new, page, off)
+        v, vs = _quantized_write(cache["v"], cache["v_scale"], v_new, page, off)
+        k = shard(k, "pages", None, "kv_heads", "head_dim")
+        v = shard(v, "pages", None, "kv_heads", "head_dim")
+        return {"k": k, "v": v, "pos": p,
+                "k_scale": shard(ks, "pages", "kv_heads"),
+                "v_scale": shard(vs, "pages", "kv_heads")}
     k = cache["k"].at[page, off].set(k_new.astype(cache["k"].dtype))
     v = cache["v"].at[page, off].set(v_new.astype(cache["v"].dtype))
-    p = cache["pos"].at[page, off].set(pos)
     k = shard(k, "pages", None, "kv_heads", "head_dim")
     v = shard(v, "pages", None, "kv_heads", "head_dim")
     return {"k": k, "v": v, "pos": p}
+
+
+def _quantized_write(store, scale, x_new, page, off):
+    """Scatter a chunk into an int8 pool, growing per-page scales in place.
+
+    Three sequenced scatters, all safe under the engine invariant that no
+    two slots write the same physical page in one step:
+
+      1. scatter-max the new tokens' absmax/127 into the page scales —
+         duplicate (page) indices combine through max;
+      2. requantize each touched page's existing bytes by old/new scale
+         (whole-page set; duplicates write identical values, and when the
+         scale did not grow the ratio is exactly 1.0 → bit-identical);
+      3. write the new tokens quantized at the final page scale (cell set,
+         overwriting step 2's doubly-rounded values at those cells).
+
+    Dropped writes (page id == pool size) fall out of every scatter.
+    """
+    N = store.shape[0]
+    page_c = jnp.clip(page, 0, N - 1)
+    xf = x_new.astype(jnp.float32)                       # (B, T, K, hd)
+    s_tok = jnp.max(jnp.abs(xf), axis=-1) / INT8_MAX     # (B, T, K)
+    scale1 = scale.at[page].max(s_tok)
+    ratio = jnp.where(
+        scale1[page_c] > 0,
+        scale[page_c] / jnp.maximum(scale1[page_c], _SCALE_EPS),
+        1.0,
+    )                                                    # (B, T, K)
+    old = store[page_c].astype(jnp.float32)              # (B, T, P, K, hd)
+    requant = jnp.round(old * ratio[:, :, None, :, None])
+    store1 = store.at[page].set(
+        jnp.clip(requant, -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    )
+    sn = jnp.maximum(scale1[page_c], _SCALE_EPS)[..., None]
+    q_tok = jnp.clip(jnp.round(xf / sn), -INT8_MAX, INT8_MAX)
+    return store1.at[page, off].set(q_tok.astype(jnp.int8)), scale1
 
 
 # ---------------------------------------------------------------------------
@@ -300,29 +373,50 @@ def admit_slot(
             if section == "groups":
                 ksrc, vsrc = src["k"][:, 0], src["v"][:, 0]  # (G, Pmax, K, hd)
                 pos_pool = pool["pos"].at[:, rows].set(-1)
-                new = {
-                    "k": pool["k"].at[:, page, off].set(
-                        ksrc.astype(pool["k"].dtype)
-                    ),
-                    "v": pool["v"].at[:, page, off].set(
-                        vsrc.astype(pool["v"].dtype)
-                    ),
-                    "pos": pos_pool.at[:, page, off].set(pos_row),
-                }
+                pos_new = pos_pool.at[:, page, off].set(pos_row)
             else:
                 ksrc, vsrc = src["k"][0], src["v"][0]        # (Pmax, K, hd)
                 pos_pool = pool["pos"].at[rows].set(-1)
+                pos_new = pos_pool.at[page, off].set(pos_row)
+            stacked = section == "groups"
+            if "k_scale" in pool:
+                kq, ks = _admit_quantized(
+                    pool["k"], pool["k_scale"], ksrc, page, off, rows, stacked
+                )
+                vq, vs = _admit_quantized(
+                    pool["v"], pool["v_scale"], vsrc, page, off, rows, stacked
+                )
+                new = {"k": kq, "v": vq, "pos": pos_new,
+                       "k_scale": ks, "v_scale": vs}
+            else:
+                lead = (slice(None),) if stacked else ()
                 new = {
-                    "k": pool["k"].at[page, off].set(
+                    "k": pool["k"].at[(*lead, page, off)].set(
                         ksrc.astype(pool["k"].dtype)
                     ),
-                    "v": pool["v"].at[page, off].set(
+                    "v": pool["v"].at[(*lead, page, off)].set(
                         vsrc.astype(pool["v"].dtype)
                     ),
-                    "pos": pos_pool.at[page, off].set(pos_row),
+                    "pos": pos_new,
                 }
             out[section][key] = {"attn": new}
     return out
+
+
+def _admit_quantized(store, scale, src, page, off, rows, stacked):
+    """Admission write into an int8 pool: the slot's rows were just reset,
+    so scales start from zero — one scatter-max then quantize every token
+    at its page's final scale (no requant pass needed)."""
+    lead = (slice(None),) if stacked else ()
+    scale = scale.at[(*lead, rows)].set(0.0)
+    sf = src.astype(jnp.float32)                         # (..., Pmax, K, hd)
+    s_tok = jnp.max(jnp.abs(sf), axis=-1) / INT8_MAX     # (..., Pmax, K)
+    scale = scale.at[(*lead, page)].max(s_tok)
+    n_pool = store.shape[-4]
+    page_c = jnp.clip(page, 0, n_pool - 1)
+    sn = jnp.maximum(scale[(*lead, page_c)], _SCALE_EPS)[..., None]
+    q = jnp.clip(jnp.round(sf / sn), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return store.at[(*lead, page, off)].set(q), scale
 
 
 # ---------------------------------------------------------------------------
@@ -350,11 +444,15 @@ def invalidate_pages(
             if pages is None:
                 out[section][key] = {"attn": pool}
                 continue
-            if section == "groups":
-                pos = pool["pos"].at[:, pages].set(-1)
-            else:
-                pos = pool["pos"].at[pages].set(-1)
-            out[section][key] = {"attn": {**pool, "pos": pos}}
+            lead = (slice(None),) if section == "groups" else ()
+            upd = {"pos": pool["pos"].at[(*lead, pages)].set(-1)}
+            if "k_scale" in pool:
+                # a freshly popped page starts its scale life over; stale
+                # int8 bytes are wiped to zero by the next write's requant
+                # pass (old scale 0 -> ratio 0) and masked by pos meanwhile
+                upd["k_scale"] = pool["k_scale"].at[(*lead, pages)].set(0.0)
+                upd["v_scale"] = pool["v_scale"].at[(*lead, pages)].set(0.0)
+            out[section][key] = {"attn": {**pool, **upd}}
     return out
 
 
@@ -371,8 +469,12 @@ def gather_slot(
     N = pool["pos"].shape[-2]
     tab = jnp.clip(table_row, 0, N - 1)
     K, hd = pool["k"].shape[-2:]
+    k, v = pool["k"][tab], pool["v"][tab]
+    if "k_scale" in pool:
+        k = k.astype(jnp.float32) * pool["k_scale"][tab][:, None, :, None]
+        v = v.astype(jnp.float32) * pool["v_scale"][tab][:, None, :, None]
     return {
-        "k": pool["k"][tab].reshape(-1, K, hd),
-        "v": pool["v"][tab].reshape(-1, K, hd),
+        "k": k.reshape(-1, K, hd),
+        "v": v.reshape(-1, K, hd),
         "pos": pool["pos"][tab].reshape(-1),
     }

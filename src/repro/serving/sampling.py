@@ -150,6 +150,7 @@ def spec_accept(
     drafts: jax.Array,        # (S, k) int32 drafted tokens
     accept_keys: jax.Array,   # (S, k, 2) uint32 — one per draft position
     sample_keys: jax.Array,   # (S, k+1, 2) uint32 — one per candidate slot
+    accept_mask=None,         # (S, k) bool; False forces rejection there
 ):
     """Standard speculative rejection sampling (leading-accept + residual).
 
@@ -161,6 +162,12 @@ def spec_accept(
     formula with q := 0.  Under greedy (one-hot p, q) the ratio is exactly
     0 or 1 and the output is the target's argmax chain, token for token.
 
+    ``accept_mask`` truncates the chain early (adaptive draft lengths):
+    position i with mask False is force-rejected.  Unbiasedness then
+    requires the caller to ALSO zero that position's ``q_dist`` row — the
+    residual at a forced stop degenerates to norm(max(p - 0, 0)) = p, the
+    plain target draw, as if the chain had simply been k_eff long.
+
     Returns (n_acc (S,) int32, extra (S,) int32).
     """
     S, k, V = q_dist.shape
@@ -170,6 +177,8 @@ def spec_accept(
     q_at_d = jnp.take_along_axis(q_dist, drafts[..., None], axis=-1)[..., 0]
     u = _uniform_from(accept_keys)                       # (S, k)
     accept = u * jnp.maximum(q_at_d, 1e-30) < p_at_d
+    if accept_mask is not None:
+        accept = accept & accept_mask
     n_acc = jnp.sum(jnp.cumprod(accept.astype(jnp.int32), axis=1), axis=1)
 
     # residual at the first rejected position (q padded with a zero row so
