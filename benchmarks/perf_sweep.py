@@ -38,15 +38,21 @@ def _candidates():
     return grid_candidates(lr=lrs, sigma=(0.5, 1.0))               # x2 sigmas
 
 
-def run():
+def run(smoke: bool = False):
     t = Timer()
     # unrolled layers: at proxy scale the scan carries no compile-size
     # benefit and the unrolled step both compiles and runs faster
     cfg = get_smoke_config("mup-gpt").replace(scan_layers=False)
     cands = _candidates()
     assert len(cands) == N_CANDIDATES
+    if smoke:
+        # CI sanity mode: 4 candidates, 3 steps — checks the serial/batched
+        # agreement contract, not throughput
+        cands = cands[::4]
 
-    kw = dict(steps=STEPS, batch_size=BATCH, seq_len=SEQ, seed=0)
+    kw = dict(
+        steps=3 if smoke else STEPS, batch_size=BATCH, seq_len=SEQ, seed=0
+    )
 
     t0 = time.time()
     serial = train_proxy_serial(cfg, cands, **kw)
@@ -56,8 +62,8 @@ def run():
     batched = train_proxy_batched(cfg, cands, **kw)
     dt_batched = time.time() - t0
 
-    cps_serial = N_CANDIDATES / dt_serial
-    cps_batched = N_CANDIDATES / dt_batched
+    cps_serial = len(cands) / dt_serial
+    cps_batched = len(cands) / dt_batched
     speedup = dt_serial / dt_batched
 
     both = np.isfinite(serial.losses) & np.isfinite(batched.losses)
@@ -81,4 +87,11 @@ def run():
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="4 candidates / 3 steps: CI agreement check, not a benchmark",
+    )
+    run(smoke=ap.parse_args().smoke)

@@ -217,11 +217,150 @@ def kernel_markdown(rows: List[Dict]) -> str:
     )
 
 
+# ---------------------------------------------------------------------------
+# per-kernel utilization vs mesh shape
+# ---------------------------------------------------------------------------
+
+MESH_SHAPES = [(1, 1), (2, 1), (2, 2), (4, 2), (8, 1)]
+
+# benchmarks/run.py mirrors the full result dict (cells + serving kernels +
+# per-mesh kernel utilization) to a repo-root headline file
+ROOT_SUMMARY = {"BENCH_ROOFLINE.json": None}
+
+# the kernel catalogue: total FLOPs/bytes at a representative shape, plus
+# how each kernel partitions on a (data, model) mesh — mirroring the
+# shard_map specs in kernels/ops.py, divisibility fallbacks included.
+# Training kernels run f32, serving pools bf16.
+_TRAIN = dict(B=8, S=2048, H=16, KV=8, d=64, V=32768, bytes_per_el=4)
+_DECODE = dict(B=8, T=5, H=8, KV=4, d=64, ctx=256, bytes_per_el=2)
+
+
+def _kernel_catalogue() -> List[Dict]:
+    B, S, H, d = _TRAIN["B"], _TRAIN["S"], _TRAIN["H"], _TRAIN["d"]
+    KV, V, eb = _TRAIN["KV"], _TRAIN["V"], _TRAIN["bytes_per_el"]
+    # causal flash attention visits ~half the (S, S) score tiles
+    fwd_flops = 4 * B * H * S * S * d * 0.5
+    # q/k/v in + o out; the recompute backward re-reads q/k/v and writes
+    # dq/dk/dv (no (S, S) materialization — that is the point of the kernel)
+    fwd_bytes = (3 * B * S * H * d + B * S * H * d) * eb
+    bwd_flops = 2.5 * fwd_flops         # recompute + dq/dk/dv matmuls
+    bwd_bytes = (6 * B * S * H * d + B * S * H * d) * eb
+
+    dB, dT, dH = _DECODE["B"], _DECODE["T"], _DECODE["H"]
+    dKV, dd, dctx, db = (
+        _DECODE["KV"], _DECODE["d"], _DECODE["ctx"], _DECODE["bytes_per_el"]
+    )
+    dec_flops = lambda T: 4 * dB * T * dH * dd * dctx
+    dec_bytes = lambda T: (
+        2 * dB * dctx * dKV * dd * db + 2 * dB * T * dH * dd * db
+    )
+
+    R = B * S
+    ce_flops = 5 * R * V                # max, sub, exp, online-sum, pick
+    ce_bytes = R * V * eb               # logits read once (chunked: no
+    #                                     (R, V) log-prob buffer)
+
+    def heads_parallel(data, model, heads):
+        return data * (model if heads % model == 0 else 1)
+
+    return [
+        {
+            "kernel": "flash_attention_fwd",
+            "shape": f"B{B} S{S} H{H} d{d} f32",
+            "flops": fwd_flops, "bytes": fwd_bytes,
+            "partition": "attn_batch x heads",
+            "shards": lambda da, mo: heads_parallel(da, mo, H),
+        },
+        {
+            "kernel": "flash_attention_bwd",
+            "shape": f"B{B} S{S} H{H} d{d} f32",
+            "flops": bwd_flops, "bytes": bwd_bytes,
+            "partition": "attn_batch x heads",
+            "shards": lambda da, mo: heads_parallel(da, mo, H),
+        },
+        {
+            "kernel": "decode_attention",
+            "shape": f"B{dB} T1 H{dH} KV{dKV} d{dd} ctx{dctx} bf16",
+            "flops": dec_flops(1), "bytes": dec_bytes(1),
+            "partition": "slots x kv_heads",
+            "shards": lambda da, mo: heads_parallel(da, mo, dKV),
+        },
+        {
+            "kernel": "decode_attention_multi",
+            "shape": f"B{dB} T{dT} H{dH} KV{dKV} d{dd} ctx{dctx} bf16",
+            "flops": dec_flops(dT), "bytes": dec_bytes(dT),
+            "partition": "slots x kv_heads",
+            "shards": lambda da, mo: heads_parallel(da, mo, dKV),
+        },
+        {
+            "kernel": "chunked_cross_entropy",
+            "shape": f"R{R} V{V} f32",
+            "flops": ce_flops, "bytes": ce_bytes,
+            "partition": "rows over data only",
+            "shards": lambda da, mo: da,
+        },
+    ]
+
+
+def kernel_utilization_rows(mesh_shapes=None) -> List[Dict]:
+    """Analytic per-kernel utilization across (data, model) mesh shapes:
+    achieved FLOP/s and HBM bandwidth vs the per-chip peaks, where
+    achieved = per-device work over the roofline step time (max of the
+    compute and memory terms).  The dominant resource runs at 1.0 by
+    construction; the interesting signals are (a) the other resource's
+    utilization, (b) where the divisibility fallback flattens scaling —
+    e.g. 4 kv-heads stop TP-scaling past model=4, so decode utilization
+    per chip stays put while the mesh grows."""
+    mesh_shapes = mesh_shapes or MESH_SHAPES
+    rows = []
+    for spec in _kernel_catalogue():
+        for data, model in mesh_shapes:
+            shards = spec["shards"](data, model)
+            flops = spec["flops"] / shards
+            byts = spec["bytes"] / shards
+            compute_s = flops / PEAK_FLOPS
+            memory_s = byts / HBM_BW
+            step_s = max(compute_s, memory_s)
+            rows.append({
+                "kernel": spec["kernel"],
+                "shape": spec["shape"],
+                "mesh": f"{data}x{model}",
+                "devices": data * model,
+                "shards": shards,
+                "partition": spec["partition"],
+                "flops_per_dev": flops,
+                "bytes_per_dev": byts,
+                "step_us": step_s * 1e6,
+                "bound": "memory" if memory_s >= compute_s else "compute",
+                "achieved_tflops": flops / step_s / 1e12,
+                "achieved_gbs": byts / step_s / 1e9,
+                "flops_utilization": (flops / PEAK_FLOPS) / step_s,
+                "hbm_utilization": (byts / HBM_BW) / step_s,
+            })
+    return rows
+
+
+def utilization_markdown(rows: List[Dict]) -> str:
+    hdr = (
+        "| kernel | mesh | shards | bound | step (µs) | TFLOP/s "
+        "(util) | GB/s (util) |\n|---|---|---|---|---|---|---|\n"
+    )
+    lines = [
+        f"| {r['kernel']} | {r['mesh']} | {r['shards']} | {r['bound']} | "
+        f"{r['step_us']:.1f} | {r['achieved_tflops']:.1f} "
+        f"({r['flops_utilization']:.0%}) | {r['achieved_gbs']:.0f} "
+        f"({r['hbm_utilization']:.0%}) |"
+        for r in rows
+    ]
+    return hdr + "\n".join(lines)
+
+
 def run():
     import time
     t0 = time.time()
     rows = load_table()
     krows = serving_kernel_rows()
+    urows = kernel_utilization_rows()
     os.makedirs("experiments", exist_ok=True)
     with open("experiments/roofline.md", "w") as f:
         if rows:
@@ -232,12 +371,26 @@ def run():
                 f.write(cmp_table + "\n")
         f.write("\n## serving decode-attention kernels (analytic, TPU v5e)\n\n")
         f.write(kernel_markdown(krows))
+        f.write(
+            "\n## per-kernel utilization vs mesh shape (analytic, TPU v5e)"
+            "\n\n" + utilization_markdown(urows) + "\n"
+        )
+    result = {
+        "cells": rows,
+        "serving_kernels": krows,
+        "kernel_utilization": urows,
+        "peaks": {
+            "flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW
+        },
+        "mesh_shapes": [f"{d}x{m}" for d, m in MESH_SHAPES],
+    }
     with open("experiments/roofline.json", "w") as f:
-        json.dump({"cells": rows, "serving_kernels": krows}, f, indent=2)
+        json.dump(result, f, indent=2)
     if not rows:
         print(f"roofline,{(time.time()-t0)*1e6:.0f},"
-              f"no-dryrun-artifacts;serving_kernels={len(krows)}")
-        return rows
+              f"no-dryrun-artifacts;serving_kernels={len(krows)};"
+              f"utilization_rows={len(urows)}")
+        return result
     worst = min(rows, key=lambda r: r["roofline_frac"])
     best = max(rows, key=lambda r: r["roofline_frac"])
     coll_bound = [r for r in rows if r["bottleneck"] == "collective"]
@@ -245,10 +398,10 @@ def run():
         f"cells={len(rows)};best={best['arch']}/{best['shape']}@"
         f"{best['roofline_frac']:.2%};worst={worst['arch']}/{worst['shape']}@"
         f"{worst['roofline_frac']:.2%};collective_bound={len(coll_bound)};"
-        f"serving_kernels={len(krows)}"
+        f"serving_kernels={len(krows)};utilization_rows={len(urows)}"
     )
     print(f"roofline,{(time.time()-t0)*1e6:.0f},{derived}")
-    return rows
+    return result
 
 
 if __name__ == "__main__":

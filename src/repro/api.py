@@ -134,6 +134,7 @@ class Experiment:
         self,
         engine_config=None,
         drafter: Optional["Experiment"] = None,
+        mesh=None,
         **ecfg_overrides,
     ):
         """A continuous-batching serving engine for this experiment's model.
@@ -170,7 +171,9 @@ class Experiment:
             or engine_config.n_window_pages is not None
         )
         cls = DynamicEngine if dynamic else Engine
-        return cls(self.build(), engine_config, draft_model=draft_model)
+        return cls(
+            self.build(), engine_config, draft_model=draft_model, mesh=mesh
+        )
 
     # ------------------------------------------------------------------
     def coord_check(

@@ -66,8 +66,12 @@ def logical_to_spec(
         ax_tuple: Tuple[str, ...] = ()
         if axes is not None:
             ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
-            # a mesh axis may appear at most once in a PartitionSpec
-            ax_tuple = tuple(a for a in ax_tuple if a not in used)
+            # a mesh axis may appear at most once in a PartitionSpec; size-1
+            # axes shard nothing and are dropped (XLA normalizes them away
+            # in jit outputs — see the trailing-None note below)
+            ax_tuple = tuple(
+                a for a in ax_tuple if a not in used and mesh.shape[a] > 1
+            )
         if shape is not None:
             # progressive divisibility fallback: drop trailing mesh axes
             # until the dim divides (e.g. batch 32 on ("data","model")=256
@@ -82,6 +86,13 @@ def logical_to_spec(
             for a in (axes,) if isinstance(axes, str) else axes:
                 used.add(a)
         entries.append(axes)
+    # normalize: P(..., None) == P(...) semantically, but jit's lowering
+    # cache keys on the representation — jit outputs come back in the
+    # trailing-None-stripped form, so produce that form here too (otherwise
+    # an eagerly-placed engine state and the step's own outputs would look
+    # like different shardings and recompile the step)
+    while entries and entries[-1] is None:
+        entries.pop()
     return P(*entries)
 
 

@@ -36,7 +36,10 @@ import os
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from repro.distributed import sharding as shd
 from repro.kernels import cross_entropy as ce
 from repro.kernels import decode_attention as da
 from repro.kernels import flash_attention as fa
@@ -44,6 +47,57 @@ from repro.kernels import ref
 from repro.kernels import rmsnorm as rn
 
 _IMPLS = ("auto", "pallas", "interpret", "ref")
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware dispatch (shard_map around the Pallas kernels)
+# ---------------------------------------------------------------------------
+# pallas_call lowers to an opaque custom call that GSPMD cannot partition —
+# left alone inside a sharded jit it would force every operand to be gathered
+# into one replicated kernel instance per device.  When a sharding context
+# (distributed.sharding.shardings) is active, the wrappers below instead run
+# the kernel body under shard_map with the partitioning that keeps it
+# collective-free:
+#
+#   attention    (attn_batch, heads)  each shard owns whole (b, h) attention
+#                                     problems; kv heads partition alongside
+#                                     q heads so GQA groups stay intact
+#   decode       (slots, kv_heads)    each shard serves its own slots'
+#                                     queries against its own kv-heads' page
+#                                     blocks (q's head layout is kv-major, so
+#                                     contiguous H partitioning = contiguous
+#                                     K partitioning); page tables and stored
+#                                     positions replicate per model shard
+#   CE / rmsnorm (rows,)              rows over the batch axes; vocab /
+#                                     feature dims stay whole per shard
+#
+# Axis resolution reuses logical_to_spec, so divisibility fallbacks and the
+# at-most-once mesh-axis rule match with_sharding_constraint exactly.  The
+# ref impl never takes these paths: plain jnp partitions fine under GSPMD.
+# The shard_map decision runs in the un-jitted outer wrappers (the nested
+# jits stay keyed on the static impl alone), so it is re-taken at every
+# enclosing trace and a context change can never hit a stale cache entry.
+
+def _mesh_axes(logical_axes, shape):
+    """(mesh, per-dim mesh-axis entries) under the active sharding context,
+    or None when there is no context / everything resolves to 1 shard."""
+    ctx = shd.current_context()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    try:
+        spec = shd.logical_to_spec(mesh, rules, logical_axes, shape)
+    except KeyError:
+        return None
+    # logical_to_spec strips trailing Nones (jit-cache normalization); pad
+    # back to one entry per dim so callers can unpack positionally
+    entries = tuple(spec) + (None,) * (len(logical_axes) - len(tuple(spec)))
+    total = 1
+    for e in entries:
+        total *= shd.mesh_axis_size(mesh, e)
+    if total == 1:
+        return None
+    return mesh, entries
 
 
 def _on_tpu() -> bool:
@@ -73,6 +127,88 @@ def _reject_untileable(op: str, impl: str, requested: str, detail: str) -> None:
         f"jnp reference. Use impl='auto' for best-effort dispatch or fix "
         f"the block size."
     )
+
+
+def _shard_map_attention(
+    impl, q, k, v, scale, *, causal, window, softcap, block_q, block_k, policy
+):
+    """Kernel flash-attention under shard_map, or None to use the plain path."""
+    B, H, K = q.shape[0], q.shape[2], k.shape[2]
+    resolved = _mesh_axes(("attn_batch", "heads"), (B, H))
+    if resolved is None:
+        return None
+    mesh, (b_ax, h_ax) = resolved
+    if h_ax is not None and K % shd.mesh_axis_size(mesh, h_ax) != 0:
+        # kv heads must partition identically to q heads or GQA groups would
+        # straddle shards; fall back to batch-only partitioning
+        h_ax = None
+        if shd.mesh_axis_size(mesh, b_ax) == 1:
+            return None
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    kernel = functools.partial(
+        fa.flash_attention, scale=1.0, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k,
+        interpret=(impl == "interpret"), policy=policy,
+    )
+    spec = P(b_ax, None, h_ax, None)
+    return shard_map(
+        kernel, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
+        check_rep=False,
+    )(qs, k, v)
+
+
+def _shard_map_decode(
+    multi, impl, q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
+    k_scale, v_scale, *, window, softcap,
+):
+    """Flash-decode under shard_map, or None to use the plain path.
+
+    Collective-free by construction: every shard runs the full online
+    softmax for its own (slot, kv-head) sub-problems — no cross-shard
+    reduction exists because attention never mixes information across heads
+    or across batch rows.
+    """
+    B, K = q.shape[0], k_pages.shape[2]
+    resolved = _mesh_axes(("slots", "kv_heads"), (B, K))
+    if resolved is None:
+        return None
+    mesh, (slot_ax, kv_ax) = resolved
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    fn = da.flash_decode_multi if multi else da.flash_decode
+    interpret = impl == "interpret"
+
+    def kernel(q_, kp, vp, pp, pt, qp, ks=None, vs=None):
+        return fn(
+            q_, kp, vp, pp, pt, qp, scale=1.0, window=window,
+            softcap=softcap, k_scale=ks, v_scale=vs, interpret=interpret,
+        )
+
+    q_spec = (
+        P(slot_ax, None, kv_ax, None) if multi else P(slot_ax, kv_ax, None)
+    )
+    pool_spec = P(None, None, kv_ax, None)
+    in_specs = [
+        q_spec, pool_spec, pool_spec, P(None, None), P(slot_ax, None),
+        P(slot_ax, None) if multi else P(slot_ax),
+    ]
+    args = [qs, k_pages, v_pages, pos_pages, page_table, q_pos]
+    if k_scale is not None:
+        in_specs += [P(None, kv_ax), P(None, kv_ax)]
+        args += [k_scale, v_scale]
+    return shard_map(
+        kernel, mesh=mesh, in_specs=tuple(in_specs), out_specs=q_spec,
+        check_rep=False,
+    )(*args)
+
+
+def _row_axis(lead: int):
+    """(mesh, batch-rule mesh axes) for partitioning a leading row dim of
+    size ``lead`` (CE / rmsnorm), or None to use the plain path."""
+    resolved = _mesh_axes(("batch",), (lead,))
+    if resolved is None:
+        return None
+    mesh, (b_ax,) = resolved
+    return mesh, b_ax
 
 
 # ---------------------------------------------------------------------------
@@ -136,6 +272,13 @@ def attention(
         impl = "ref"
     if policy is not None and not policy.active:
         policy = None
+    if impl != "ref":
+        out = _shard_map_attention(
+            impl, q, k, v, scale, causal=causal, window=window,
+            softcap=softcap, block_q=bq, block_k=bk, policy=policy,
+        )
+        if out is not None:
+            return out
     return _attention_jit(
         q, k, v, scale, causal=causal, window=window, softcap=softcap,
         block_q=bq, block_k=bk, impl=impl, policy=policy,
@@ -182,10 +325,18 @@ def decode_attention(
     per-page-per-head scales.  Pages are whole-block fetches — every shape
     tiles, no fallback needed.
     """
+    impl = _resolve_impl(impl)
+    if impl != "ref":
+        out = _shard_map_decode(
+            False, impl, q, k_pages, v_pages, pos_pages, page_table, q_pos,
+            scale, k_scale, v_scale, window=window, softcap=softcap,
+        )
+        if out is not None:
+            return out
     return _decode_attention_jit(
         q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
         k_scale, v_scale,
-        window=window, softcap=softcap, impl=_resolve_impl(impl),
+        window=window, softcap=softcap, impl=impl,
     )
 
 
@@ -229,10 +380,18 @@ def decode_attention_multi(
     ``k_scale``/``v_scale`` select the int8-pool dequant path, as in
     decode_attention.
     """
+    impl = _resolve_impl(impl)
+    if impl != "ref":
+        out = _shard_map_decode(
+            True, impl, q, k_pages, v_pages, pos_pages, page_table, q_pos,
+            scale, k_scale, v_scale, window=window, softcap=softcap,
+        )
+        if out is not None:
+            return out
     return _decode_attention_multi_jit(
         q, k_pages, v_pages, pos_pages, page_table, q_pos, scale,
         k_scale, v_scale,
-        window=window, softcap=softcap, impl=_resolve_impl(impl),
+        window=window, softcap=softcap, impl=impl,
     )
 
 
@@ -253,9 +412,21 @@ def _rmsnorm_jit(x, gain, *, eps, block_rows, impl):
 def fused_rmsnorm(x, gain, *, eps: float = 1e-6, block_rows: int = 256,
                   impl: str = "auto"):
     # rmsnorm pads rows internally — every shape tiles, no fallback needed
-    return _rmsnorm_jit(
-        x, gain, eps=eps, block_rows=block_rows, impl=_resolve_impl(impl)
-    )
+    impl = _resolve_impl(impl)
+    if impl != "ref" and x.ndim >= 2:
+        resolved = _row_axis(x.shape[0])
+        if resolved is not None:
+            mesh, b_ax = resolved
+            x_spec = P(b_ax, *([None] * (x.ndim - 1)))
+            kernel = functools.partial(
+                rn.rmsnorm, eps=eps, block_rows=block_rows,
+                interpret=(impl == "interpret"),
+            )
+            return shard_map(
+                kernel, mesh=mesh, in_specs=(x_spec, P(None)),
+                out_specs=x_spec, check_rep=False,
+            )(x, gain)
+    return _rmsnorm_jit(x, gain, eps=eps, block_rows=block_rows, impl=impl)
 
 
 # ---------------------------------------------------------------------------
@@ -293,6 +464,22 @@ def softmax_cross_entropy(
             f"V={V} vs vocab chunk {bv}",
         )
         impl = "ref"
+    if impl != "ref":
+        resolved = _row_axis(logits.shape[0])
+        if resolved is not None:
+            # rows over the data axes only: each row's loss is independent,
+            # and the kernel chunks the (whole, per-shard) vocab internally
+            mesh, b_ax = resolved
+            l_spec = P(b_ax, *([None] * (logits.ndim - 1)))
+            y_spec = P(b_ax, *([None] * (labels.ndim - 1)))
+            kernel = functools.partial(
+                ce.cross_entropy, block_rows=block_rows, block_v=bv,
+                interpret=(impl == "interpret"),
+            )
+            return shard_map(
+                kernel, mesh=mesh, in_specs=(l_spec, y_spec),
+                out_specs=y_spec, check_rep=False,
+            )(logits, labels)
     return _softmax_xent_jit(
         logits, labels, block_rows=block_rows, block_v=bv, impl=impl
     )

@@ -33,9 +33,13 @@ from repro.configs import get_config, get_smoke_config
 from repro.core.parametrization import available_parametrizations
 from repro.core.transfer import HParams, transfer
 from repro.data.pipeline import make_pipeline
-from repro.distributed.sharding import make_rules, shardings as sharding_ctx
+from repro.distributed.sharding import (
+    make_rules,
+    named_sharding,
+    shardings as sharding_ctx,
+)
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, set_scaleout_xla_flags
 from repro.models.model import build_model
 from repro.optim import schedules as sched_lib
 from repro.optim.optimizer import Optimizer
@@ -59,8 +63,19 @@ def train_loop(
     compress_grads: bool = False,
     log_every: int = 10,
     seed: int = 0,
+    mesh=None,
+    model_parallel: int = 1,
+    fsdp: bool = False,
 ) -> Dict[str, Any]:
-    """One training run (possibly resuming). Returns final metrics."""
+    """One training run (possibly resuming). Returns final metrics.
+
+    ``model_parallel`` > 1 (or an explicit ``mesh``) trains on a 2-D
+    (data × model) mesh: batch data-parallel, heads/ffn/vocab tensor-
+    parallel over "model", and with ``fsdp`` the weights additionally
+    ZeRO-3-sharded over "data" (see docs/distributed.md).  The requested
+    degree degrades by halving until it divides the device count, so the
+    same invocation runs on 1 CPU and on a pod.
+    """
     xfer = transfer(hps, cfg)
     cfg = cfg.replace(**xfer["model"])
     model = build_model(cfg)
@@ -76,9 +91,16 @@ def train_loop(
         compress_grads=compress_grads,
     )
 
-    mesh = make_host_mesh()
-    rules = make_rules(mesh, cfg=cfg, fsdp=False)
+    if mesh is None:
+        mesh = make_host_mesh(model_parallel)
+    rules = make_rules(mesh, cfg=cfg, fsdp=fsdp)
     p_sh = steps_lib.param_shardings(mesh, rules, model.meta)
+    batch_sh = lambda v: jax.device_put(
+        v,
+        named_sharding(
+            mesh, rules, ("batch",) + (None,) * (v.ndim - 1), v.shape
+        ),
+    )
 
     params = model.init(jax.random.PRNGKey(seed))
     params = jax.tree_util.tree_map(jax.device_put, params, p_sh)
@@ -112,7 +134,9 @@ def train_loop(
                     ckpt.wait()
                 raise SimulatedFailure(f"injected node failure at step {t}")
             t0 = time.time()
-            batch = {k: jnp.asarray(v) for k, v in pipe.batch(t).items()}
+            batch = {
+                k: batch_sh(jnp.asarray(v)) for k, v in pipe.batch(t).items()
+            }
             params, opt_state, metrics = jit_step(params, opt_state, batch)
             loss = float(metrics["loss"])
             dt = time.time() - t0
@@ -161,8 +185,19 @@ def main(argv=None):
                          "+ their backward + readout logits); master weights "
                          "and optimizer state stay f32 — safe under u-µP "
                          "unit scaling (see docs/quantization.md)")
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="tensor-parallel degree on the mesh's model axis "
+                         "(degrades by halving until it divides the device "
+                         "count; 1 = pure data parallel)")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="additionally ZeRO-3-shard weights over the data "
+                         "axis (all-gather/reduce-scatter pairs inserted by "
+                         "SPMD; overlapped via the async-collective flags)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # must precede any jax operation: XLA reads the flags at backend init
+    set_scaleout_xla_flags()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     cfg = cfg.replace(parametrization=args.parametrization, dtype="float32",
@@ -176,6 +211,7 @@ def main(argv=None):
         batch_size=args.batch_size, seq_len=args.seq_len,
         ckpt_every=args.ckpt_every, num_microbatches=args.microbatches,
         compress_grads=args.compress_grads, seed=args.seed,
+        model_parallel=args.model_parallel, fsdp=args.fsdp,
     )
     try:
         out = train_loop(cfg, simulate_failure_at=args.simulate_failure, **kw)

@@ -78,7 +78,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.distributed.sharding import shard
+from repro.distributed.sharding import (
+    make_rules,
+    named_sharding,
+    shard,
+    shardings as sharding_ctx,
+)
 from repro.serving import kv_cache, sampling
 from repro.serving.allocator import BlockManager
 
@@ -114,10 +119,17 @@ class Engine:
     is traced data.  Pass ``draft_model`` (same vocab; typically the µP
     proxy of the target) with ``ecfg.draft_k >= 1`` to enable lossless
     speculative decoding.
+
+    Pass ``mesh`` (a ``(data, model)`` jax Mesh) to serve multi-device:
+    slots shard data-parallel, the flash-decode kernels run tensor-parallel
+    over kv-heads (q's head layout is kv-major, so GQA groups never straddle
+    shards), page tables and stored positions replicate per model shard.
+    The serve program still compiles exactly once — the mesh only changes
+    *where* the one program's operands live (see docs/distributed.md).
     """
 
     def __init__(self, model, ecfg: EngineConfig = EngineConfig(),
-                 draft_model=None):
+                 draft_model=None, mesh=None):
         if ecfg.prefix_cache or ecfg.prefill_chunk or ecfg.adaptive_draft or (
             ecfg.n_pages is not None or ecfg.n_window_pages is not None
         ):
@@ -129,8 +141,68 @@ class Engine:
         # of the earliest query in the same forward — the windowed ring must
         # cover window + k before wrapping (see kv_cache.build_spec).
         self._init_common(model, ecfg, draft_model, lookahead=ecfg.draft_k)
+        self._init_mesh(model, mesh)
         self.gtable, self.wtable = kv_cache.make_tables(self.spec)
         self._serve = jax.jit(self._run)
+
+    def _init_mesh(self, model, mesh):
+        self.mesh = mesh
+        self._rules = None if mesh is None else make_rules(
+            mesh, cfg=model.cfg, fsdp=False, kind="decode"
+        )
+
+    def _sharding_ctx(self):
+        """The engine's sharding context: entered around every traced call,
+        so the ONE trace of the serve program sees the same mesh every
+        device-side ``shard()`` / kernel-dispatch decision reads."""
+        return sharding_ctx(self.mesh, self._rules)
+
+    def _constrain_state(self, st):
+        """Pin every engine-state leaf to its canonical sharding (per-slot
+        vectors over "slots", pools per constrain_pools, everything else
+        replicated).  Identity without a mesh.  The dynamic engine applies
+        this to both the initial state and the step outputs, so the jitted
+        step sees identical input shardings on every host-loop iteration —
+        without it, XLA's freely-chosen output shardings would differ from
+        the fresh inputs' and the second call would recompile."""
+        if self.mesh is None:
+            return st
+        out = dict(st)
+        for k in ("active", "slot_req", "slot_pos", "slot_last",
+                  "slot_ntok", "last_acc", "last_prop"):
+            if k in out:
+                out[k] = shard(out[k], "slots")
+        if "slot_ctx" in out:
+            out["slot_ctx"] = shard(out["slot_ctx"], "slots", None)
+        for k in ("step", "next_req", "accepted", "proposed"):
+            if k in out:
+                out[k] = shard(out[k])
+        out["out_toks"] = shard(out["out_toks"], None, None)
+        out["out_len"] = shard(out["out_len"], None)
+        out["pools"] = kv_cache.constrain_pools(out["pools"])
+        if out.get("dpools") is not None:
+            out["dpools"] = kv_cache.constrain_pools(out["dpools"])
+        return out
+
+    def shard_params(self, params, model=None):
+        """device_put ``params`` onto the engine's mesh per the decode
+        sharding rules (TP over heads/ffn/vocab; no fsdp — serving wants
+        weights resident, not gathered per step).  Identity without a mesh.
+        Pass ``model=self.draft_model`` to place drafter params (the
+        divisibility fallback re-resolves per tensor, so a drafter with
+        unshardable head counts simply replicates those tensors)."""
+        if self.mesh is None:
+            return params
+        from repro.core.meta import ParamMeta  # local: avoid import cycles
+
+        meta = (model or self.model).meta
+        sh = jax.tree_util.tree_map(
+            lambda m: named_sharding(
+                self.mesh, self._rules, m.sharding, m.infshape.shape
+            ),
+            meta, is_leaf=lambda x: isinstance(x, ParamMeta),
+        )
+        return jax.tree_util.tree_map(jax.device_put, params, sh)
 
     def _init_common(self, model, ecfg: EngineConfig, draft_model, lookahead):
         """Validation + geometry shared by the static and dynamic engines."""
@@ -215,7 +287,8 @@ class Engine:
             "top_p": p0 if top_p is None else jnp.asarray(top_p, jnp.float32),
             "seed": jnp.asarray(seed, jnp.int32),
         }
-        return self._serve(params, draft_params, queue)
+        with self._sharding_ctx():
+            return self._serve(params, draft_params, queue)
 
     # ------------------------------------------------------------------
     def _is_eos(self, tok: jax.Array) -> jax.Array:
@@ -649,7 +722,7 @@ class DynamicEngine(Engine):
     """
 
     def __init__(self, model, ecfg: EngineConfig = EngineConfig(),
-                 draft_model=None):
+                 draft_model=None, mesh=None):
         C = ecfg.prefill_chunk
         if C < 0 or (C and C % ecfg.page_size):
             raise ValueError(
@@ -668,6 +741,7 @@ class DynamicEngine(Engine):
             model, ecfg, draft_model,
             lookahead=max(ecfg.draft_k, C - 1 if C else 0),
         )
+        self._init_mesh(model, mesh)
         spec = self.spec
         self.n_pages = ecfg.n_pages or spec.n_global_pages
         self.n_window_pages = (
@@ -688,15 +762,19 @@ class DynamicEngine(Engine):
             np.zeros((spec.n_slots, spec.wp_cols), np.int32)
             if spec.wp_cols else None
         )
-        # pools persist across serve() calls: prefix-cached pages stay warm
-        self._pools = kv_cache.init_pools(
-            model.cfg, spec, n_global=self.n_pages,
-            n_window=self.n_window_pages,
-        )
-        self._dpools = (
-            kv_cache.init_pools(draft_model.cfg, self.dspec)
-            if draft_model is not None else None
-        )
+        # pools persist across serve() calls: prefix-cached pages stay warm.
+        # created under the sharding context so the persistent buffers are
+        # born on the mesh (kv-heads TP) instead of being resharded by the
+        # first step.
+        with self._sharding_ctx():
+            self._pools = kv_cache.init_pools(
+                model.cfg, spec, n_global=self.n_pages,
+                n_window=self.n_window_pages,
+            )
+            self._dpools = (
+                kv_cache.init_pools(draft_model.cfg, self.dspec)
+                if draft_model is not None else None
+            )
         self._step = jax.jit(self._step_impl)
 
     # ------------------------------------------------------------------
@@ -821,6 +899,7 @@ class DynamicEngine(Engine):
                     params, queue, base_key, s, gtable, wtable
                 )
         st = jax.lax.cond(jnp.any(st["active"]), dec, lambda s: s, st)
+        st = self._constrain_state(st)
         info = {
             "active": st["active"],
             "slot_ntok": st["slot_ntok"],
@@ -900,6 +979,11 @@ class DynamicEngine(Engine):
             if self.ecfg.adaptive_draft:
                 st["last_acc"] = jnp.zeros((S,), jnp.int32)
                 st["last_prop"] = jnp.zeros((S,), jnp.int32)
+        with self._sharding_ctx():
+            # eager placement: the fresh leaves start on the mesh with the
+            # same shardings the step's outputs are constrained to, so the
+            # step compiles once and never reshards its own carried state
+            st = self._constrain_state(st)
 
         # adaptive-draft controller state: per-slot acceptance-rate EMA
         # drives the next step's effective draft length (pure host control —
@@ -999,9 +1083,10 @@ class DynamicEngine(Engine):
             tables = {"g": jnp.asarray(self._gtab)}
             if self._wtab is not None:
                 tables["w"] = jnp.asarray(self._wtab)
-            st, info = self._step(
-                params, draft_params, st, queue, tables, ctrl
-            )
+            with self._sharding_ctx():
+                st, info = self._step(
+                    params, draft_params, st, queue, tables, ctrl
+                )
             info = jax.device_get(info)
             steps += 1
             tnow = time.perf_counter() - t0

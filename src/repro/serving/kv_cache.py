@@ -195,7 +195,9 @@ def init_pools(
             return spec.n_window_pages if n_window is None else n_window
         return spec.n_global_pages if n_global is None else n_global
 
-    return {
+    # born on the mesh: constrain_pools places the fresh buffers exactly as
+    # every later write will, so the first step never reshards them
+    return constrain_pools({
         "groups": {
             f"{i}_{kind}": {"attn": pool(n_pages(kind), True)}
             for i, kind in enumerate(cfg.pattern)
@@ -203,6 +205,38 @@ def init_pools(
         "tail": {
             f"{i}_{kind}": {"attn": pool(n_pages(kind), False)}
             for i, kind in enumerate(cfg.tail)
+        },
+    })
+
+
+def constrain_pools(pools: Dict[str, Any]) -> Dict[str, Any]:
+    """Assert the canonical pool shardings on an existing pool pytree: pages
+    replicate (any slot may own any page), the kv-head dim tensor-parallels
+    over the model axis, matching paged_cache_write.  Identity without an
+    active sharding context.  The dynamic engine re-asserts this on its step
+    outputs so persistent pools carry the same sharding the next step's
+    inputs expect (jit cache stability across host-loop iterations)."""
+
+    def one(p, stacked):
+        la = ("layers",) if stacked else ()
+        q = {
+            "k": shard(p["k"], *la, "pages", None, "kv_heads", "head_dim"),
+            "v": shard(p["v"], *la, "pages", None, "kv_heads", "head_dim"),
+            "pos": shard(p["pos"], *la, "pages", None),
+        }
+        if "k_scale" in p:
+            q["k_scale"] = shard(p["k_scale"], *la, "pages", "kv_heads")
+            q["v_scale"] = shard(p["v_scale"], *la, "pages", "kv_heads")
+        return q
+
+    return {
+        "groups": {
+            k: {"attn": one(v["attn"], True)}
+            for k, v in pools["groups"].items()
+        },
+        "tail": {
+            k: {"attn": one(v["attn"], False)}
+            for k, v in pools["tail"].items()
         },
     }
 

@@ -1,0 +1,241 @@
+"""Property tests for mesh construction and sharding-rule degradation.
+
+Two families of invariants (ISSUE 9 satellite):
+
+  - ``fit_model_parallel`` / ``make_elastic_mesh`` / ``make_host_mesh``:
+    ANY surviving device count and ANY requested TP degree must yield a
+    valid (data, model) factorization — data * model == n_devices, both
+    positive, model <= requested.
+  - ``logical_to_spec`` divisibility fallback: for arbitrary shapes and
+    rule sets the resulting PartitionSpec is always *valid* — every mesh
+    axis exists, appears at most once, every partitioned dim is divisible
+    by its shard count, and the normalized form never ends in None.
+
+The deterministic sweeps below always run (they ARE the property, over an
+exhaustive small domain); the hypothesis versions widen the domain when the
+dependency is installed (CI's multidevice job installs it).
+"""
+from __future__ import annotations
+
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    ShardingRules,
+    logical_to_spec,
+    mesh_axis_size,
+)
+from repro.launch.mesh import (
+    fit_model_parallel,
+    make_elastic_mesh,
+    make_host_mesh,
+    make_mesh_shape,
+    set_scaleout_xla_flags,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _check_fit(n, requested):
+    data, model = fit_model_parallel(n, requested)
+    assert data >= 1 and model >= 1
+    assert data * model == n, (n, requested, data, model)
+    assert model <= max(requested, 1)
+    assert n % model == 0
+
+
+def _spec_is_valid(mesh, spec, shape):
+    used = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        for a in axes:
+            assert a in mesh.axis_names, (spec, a)
+            assert a not in used, f"mesh axis {a} used twice in {spec}"
+            used.append(a)
+        assert shape[i] % mesh_axis_size(mesh, entry) == 0, (
+            f"dim {i} of {shape} not divisible by {entry} in {spec}"
+        )
+    # normalized form: jit's lowering cache keys on the representation
+    assert not (len(spec) and spec[-1] is None), spec
+
+
+# ---------------------------------------------------------------------------
+# fit_model_parallel: exhaustive small-domain sweep
+# ---------------------------------------------------------------------------
+
+def test_fit_model_parallel_exhaustive():
+    for n in range(1, 65):
+        for requested in range(-2, 70):
+            _check_fit(n, requested)
+
+
+def test_fit_model_parallel_exact_when_divisible():
+    # no degradation when the request already divides the device count
+    for n, m in [(8, 2), (8, 4), (8, 8), (12, 3), (6, 3)]:
+        assert fit_model_parallel(n, m) == (n // m, m)
+
+
+def test_fit_model_parallel_degrades_by_halving():
+    assert fit_model_parallel(8, 6) == (8, 1)   # 6 -> 3 -> 1 (3 ∤ 8)
+    assert fit_model_parallel(6, 4) == (3, 2)   # 4 -> 2 divides 6
+    assert fit_model_parallel(7, 4) == (7, 1)   # prime: only 1 fits
+    assert fit_model_parallel(8, 16) == (1, 8)  # clamped to device count
+
+
+def test_fit_model_parallel_rejects_empty():
+    with pytest.raises(ValueError):
+        fit_model_parallel(0, 1)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=200, deadline=None)
+    @given(n=st.integers(1, 4096), requested=st.integers(-8, 8192))
+    def test_fit_model_parallel_property(n, requested):
+        _check_fit(n, requested)
+
+
+# ---------------------------------------------------------------------------
+# mesh constructors on the real (virtual) device set
+# ---------------------------------------------------------------------------
+
+def test_make_host_mesh_accepts_model_parallel():
+    """Regression (ISSUE 9 satellite): make_host_mesh used to pin the model
+    axis to 1; it must now honor a requested TP degree with the same
+    degradation contract as the elastic path."""
+    mesh = make_host_mesh()
+    assert mesh.shape["model"] == 1            # default unchanged
+    n = jax.device_count()
+    for req in (1, 2, 3, n, 2 * n):
+        mesh = make_host_mesh(req)
+        assert mesh.shape["data"] * mesh.shape["model"] == n
+        assert mesh.axis_names == ("data", "model")
+        data, model = fit_model_parallel(n, req)
+        assert (mesh.shape["data"], mesh.shape["model"]) == (data, model)
+
+
+def test_make_elastic_mesh_any_survivor_count():
+    """Elastic restart: any surviving device count must yield a valid mesh
+    (the motivating case is losing a host mid-run)."""
+    n_avail = jax.device_count()
+    for n in range(1, n_avail + 1):
+        mesh = make_elastic_mesh(n)
+        assert mesh.shape["data"] * mesh.shape["model"] == n
+        assert len(mesh.devices.flatten()) == n
+
+
+def test_scaleout_flags_gated_by_platform(monkeypatch):
+    """xla_gpu_* flags are unregistered in CPU jaxlib builds (fatal parse
+    error), so the helper must only add them when a GPU platform is
+    requested; `extra` flags always apply."""
+    monkeypatch.setenv("JAX_PLATFORMS", "cpu")
+    monkeypatch.setenv("XLA_FLAGS", "")
+    out = set_scaleout_xla_flags(extra=("--xla_foo=1",))
+    assert "xla_gpu" not in out and "--xla_foo=1" in out
+
+    monkeypatch.setenv("JAX_PLATFORMS", "cuda")
+    monkeypatch.setenv("XLA_FLAGS", "--xla_gpu_enable_async_collectives=false")
+    out = set_scaleout_xla_flags()
+    # existing option wins (no duplicate), the other two are appended
+    assert out.count("--xla_gpu_enable_async_collectives") == 1
+    assert "--xla_gpu_enable_latency_hiding_scheduler=true" in out
+
+
+@pytest.mark.skipif(jax.device_count() < 8, reason="needs 8 devices")
+def test_make_mesh_shape_subsets():
+    for shape in [(1, 1), (2, 1), (2, 2), (4, 2), (8, 1)]:
+        mesh = make_mesh_shape(shape)
+        assert (mesh.shape["data"], mesh.shape["model"]) == shape
+    with pytest.raises(ValueError):
+        make_mesh_shape((16, 16))
+
+
+# ---------------------------------------------------------------------------
+# logical_to_spec: degraded rules never produce an invalid PartitionSpec
+# ---------------------------------------------------------------------------
+
+_AXIS_MENU = [
+    None, "data", "model", ("data", "model"), ("model", "data"),
+]
+
+
+def _stub_mesh(data, model):
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        devices=jax.devices()[: data * model],
+    )
+
+
+def _spec_case(mesh, axis_choices, dims):
+    rules = ShardingRules(
+        rules={f"L{i}": ax for i, ax in enumerate(axis_choices)}
+    )
+    logical = tuple(f"L{i}" for i in range(len(dims)))
+    spec = logical_to_spec(mesh, rules, logical, dims)
+    _spec_is_valid(mesh, spec, dims)
+    return spec
+
+
+def test_logical_to_spec_exhaustive_small():
+    """All rule combinations x awkward shapes on every host-fittable mesh:
+    the fallback must always land on a valid spec, never raise."""
+    n = jax.device_count()
+    meshes = [(d, m) for d in (1, 2, 4) for m in (1, 2) if d * m <= n]
+    shapes = [(1, 1), (2, 3), (4, 6), (8, 8), (15, 16), (5, 7)]
+    for dmesh in meshes:
+        mesh = _stub_mesh(*dmesh)
+        for a0 in _AXIS_MENU:
+            for a1 in _AXIS_MENU:
+                for dims in shapes:
+                    _spec_case(mesh, (a0, a1), dims)
+
+
+def test_logical_to_spec_normalization():
+    """The two jit-cache-stability normalizations: size-1 mesh axes drop out
+    of entries, trailing Nones are stripped."""
+    mesh = _stub_mesh(min(2, jax.device_count()), 1)
+    rules = ShardingRules(rules={"s": ("data", "model"), "n": None})
+    # 'model' has size 1 -> spec must be P('data'), not P(('data','model'))
+    spec = logical_to_spec(mesh, rules, ("s", "n"), (4, 8))
+    want = P("data") if mesh.shape["data"] > 1 else P()
+    assert spec == want, spec
+    # fully-replicated resolves to the canonical empty spec
+    assert logical_to_spec(mesh, rules, ("n", "n"), (4, 8)) == P()
+
+
+def test_logical_to_spec_dedups_mesh_axes():
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices")
+    mesh = _stub_mesh(2, 2)
+    rules = ShardingRules(rules={"a": "data", "b": ("data", "model")})
+    # 'data' is taken by dim 0; dim 1 may only use what remains
+    spec = logical_to_spec(mesh, rules, ("a", "b"), (4, 4))
+    assert spec == P("data", "model"), spec
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=150, deadline=None)
+    @given(
+        data=st.sampled_from([1, 2, 4]),
+        model=st.sampled_from([1, 2]),
+        axes=st.lists(st.sampled_from(_AXIS_MENU), min_size=1, max_size=4),
+        dims=st.data(),
+    )
+    def test_logical_to_spec_property(data, model, axes, dims):
+        if data * model > jax.device_count():
+            return
+        mesh = _stub_mesh(data, model)
+        shape = tuple(
+            dims.draw(st.integers(1, 64), label=f"dim{i}")
+            for i in range(len(axes))
+        )
+        _spec_case(mesh, axes, shape)
