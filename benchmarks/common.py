@@ -10,6 +10,7 @@ import numpy as np
 
 from repro.data.pipeline import make_pipeline
 from repro.models.model import build_model
+from repro.obs.metrics import percentile_summary
 from repro.optim.optimizer import Optimizer, apply_updates
 
 
@@ -86,6 +87,28 @@ def optimum_shift_log2(
     return abs(
         np.log2(argmin_lr(widths[-1])) - np.log2(argmin_lr(widths[0]))
     )
+
+
+def latency_metrics(out: Dict) -> Dict:
+    """TTFT (vs arrival) / inter-token-latency percentiles + goodput from a
+    dynamic-engine ``serve(record_times=True)`` result.  The percentile
+    implementation is the obs histogram's (repro.obs.metrics) — one copy,
+    shared with the serving metrics registry."""
+    ttft, itl = [], []
+    for r, times in enumerate(out["token_times"]):
+        if not times:
+            continue
+        ttft.append(times[0] - out["arrivals"][r])
+        itl.extend(np.diff(times))
+    makespan = max(t[-1] for t in out["token_times"] if t)
+    n_tok = int(np.asarray(out["lengths"]).sum())
+    return {
+        "ttft": percentile_summary(ttft),
+        "itl": percentile_summary(itl if itl else [0.0]),
+        "goodput_tok_s": n_tok / makespan,
+        "makespan_s": float(makespan),
+        "tokens": n_tok,
+    }
 
 
 class Timer:

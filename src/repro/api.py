@@ -287,15 +287,22 @@ class Experiment:
         hps: Optional[HParams] = None,
         batch_size: int = 8,
         seq_len: int = 128,
+        obs=None,
         **kw,
     ) -> Dict[str, Any]:
         """Train this experiment's model with its (tuned or given) HPs via
         the end-to-end driver (``launch.train.train_loop``: sharded step,
-        checkpointing, watchdog).  Returns the driver's metrics dict."""
+        checkpointing, watchdog).  Returns the driver's metrics dict.
+
+        ``obs``: a :class:`repro.obs.TrainObs` — attaches the metrics
+        registry and, with ``telemetry=True``, the online µP-health aux
+        (activation/logit coordinate sizes + update-to-weight ratios) with
+        optional drift detection against a proxy baseline.  See
+        ``docs/observability.md``."""
         from repro.launch.train import train_loop  # deferred: heavy imports
 
         hps = hps or self.hps or self.space.hparams()
         return train_loop(
             self.cfg, steps=steps, hps=hps, batch_size=batch_size,
-            seq_len=seq_len, **kw,
+            seq_len=seq_len, obs=obs, **kw,
         )

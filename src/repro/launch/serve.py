@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.distributed.sharding import make_rules, shardings as sharding_ctx
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, make_mesh_shape
 from repro.models.model import build_model
 from repro.serving.engine import DynamicEngine, Engine, EngineConfig
 from repro.serving.kv_cache import SERVABLE_KINDS, kv_dtype_of, pool_bytes
@@ -173,6 +173,15 @@ def main(argv=None):
                     help="random per-request prompt lengths (engine only: "
                          "the dense driver always pads to --prompt-len, so "
                          "its tok/s would not be comparable)")
+    ap.add_argument("--mesh", default=None, metavar="DATA,MODEL",
+                    help="serve on an explicit (data, model) mesh, e.g. "
+                         "'1,2' for 2-way tensor parallelism over kv-heads/"
+                         "ffn/vocab (engine only; needs data*model devices; "
+                         "see docs/distributed.md)")
+    ap.add_argument("--obs", action="store_true",
+                    help="record serving metrics + a phase trace; prints "
+                         "the Prometheus exposition at exit (see "
+                         "docs/observability.md)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -191,6 +200,28 @@ def main(argv=None):
     if not args.dense and not use_engine:
         print(f"[serve] {cfg.name}: pattern {cfg.pattern} not paged-servable "
               f"yet; falling back to the dense-loop driver")
+
+    emesh = None
+    if args.mesh:
+        try:
+            dm = tuple(int(x) for x in args.mesh.split(","))
+            if len(dm) != 2 or min(dm) < 1:
+                raise ValueError
+        except ValueError:
+            ap.error(f"--mesh wants 'DATA,MODEL' positive ints, "
+                     f"got {args.mesh!r}")
+        if not use_engine:
+            ap.error("--mesh needs the paged engine (not --dense / "
+                     "dense-fallback archs)")
+        emesh = make_mesh_shape(dm)
+        print(f"[serve] mesh {dm}: slots data-parallel x{dm[0]}, "
+              f"kv-heads/ffn/vocab tensor-parallel x{dm[1]}")
+
+    obs = None
+    if args.obs:
+        from repro.obs import ServeObs, Tracer
+
+        obs = ServeObs(tracer=Tracer())
     # default workload: every prompt at full width, so engine and --dense
     # runs of the same CLI serve the *same* requests and their printed
     # tok/s are directly comparable
@@ -239,10 +270,16 @@ def main(argv=None):
                 n_pages=args.pool_pages,
                 adaptive_draft=args.adaptive_draft,
             )
-            engine = (
-                Engine(model, ecfg, draft_model=draft_model) if args.static
-                else DynamicEngine(model, ecfg, draft_model=draft_model)
+            cls = Engine if args.static else DynamicEngine
+            engine = cls(
+                model, ecfg, draft_model=draft_model, mesh=emesh, obs=obs
             )
+            if emesh is not None:
+                params = engine.shard_params(params)
+                if draft_params is not None:
+                    draft_params = engine.shard_params(
+                        draft_params, model=draft_model
+                    )
             n_global = getattr(engine, "n_pages", None)
             print(f"[serve] paged KV pools ({kv_dtype_of(cfg)}): "
                   f"{pool_bytes(cfg, engine.spec)/2**20:.1f} MiB "
@@ -289,6 +326,9 @@ def main(argv=None):
     print(f"[serve:{mode}] generated {toks.shape} ({n_tok} tokens) "
           f"in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
     print(toks[:, :16])
+    if obs is not None:
+        print(f"[obs] {len(obs.tracer.events)} trace events")
+        print(obs.metrics.to_prometheus(), end="")
     return toks
 
 

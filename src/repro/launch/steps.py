@@ -16,6 +16,7 @@ from repro.distributed.sharding import (
     logical_to_spec,
     named_sharding,
 )
+from repro.obs import telemetry as obs_telemetry
 from repro.optim.grad import (
     accumulate_gradients,
     clip_by_global_norm,
@@ -30,12 +31,29 @@ def make_train_step(
     clip_norm: float = 1.0,
     num_microbatches: int = 1,
     compress_grads: bool = False,
+    telemetry: bool = False,
 ) -> Callable:
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     opt_state grows a "residual" entry when gradient compression (bf16 +
     error feedback) is enabled.
+
+    ``telemetry`` adds a ``metrics["obs"]`` aux pytree — the µP-health
+    statistics of obs/telemetry.py: the forward's activation coordinate
+    sizes (embedding / per-block residual stream / logits, computed
+    *inside* the trace, pre-update — matching the offline coord check's
+    Fig-5 convention of logging x_t before the step) plus per-tensor
+    update-to-weight ratios.  Every leaf is fixed-shape traced data, so
+    the instrumented step compiles once like the plain one; when
+    ``telemetry`` is False the emitted program is byte-identical to
+    before the option existed.
     """
+    if telemetry and num_microbatches > 1:
+        raise ValueError(
+            "telemetry=True needs num_microbatches == 1: the health aux "
+            "is the whole-batch forward's statistics (accumulation would "
+            "average activations across microbatch forwards)"
+        )
 
     # (bf16_param_gather is handled at the use sites — apply_w(pre_gather=)
     # places an explicit sharding boundary on the converted weight so the
@@ -43,9 +61,15 @@ def make_train_step(
     loss_fn = model.loss_fn
 
     def train_step(params, opt_state, batch):
-        loss, grads = accumulate_gradients(
-            loss_fn, params, batch, num_microbatches
-        )
+        if telemetry:
+            (loss, acts), grads = jax.value_and_grad(
+                lambda p, b: loss_fn(p, b, collect_stats=True), has_aux=True
+            )(params, batch)
+        else:
+            acts = None
+            loss, grads = accumulate_gradients(
+                loss_fn, params, batch, num_microbatches
+            )
         if compress_grads:
             grads, residual = compress_bf16(grads, opt_state.get("residual"))
             opt_state = dict(opt_state, residual=residual)
@@ -54,9 +78,17 @@ def make_train_step(
         updates, opt_state = opt.update(grads, opt_state, params)
         if residual is not None:
             opt_state = dict(opt_state, residual=residual)
-        params = apply_updates(params, updates)
+        new_params = apply_updates(params, updates)
         metrics = {"loss": loss, "grad_norm": gnorm}
-        return params, opt_state, metrics
+        if telemetry:
+            metrics["obs"] = {
+                **acts,
+                **{
+                    f"u2w/{k}": v for k, v in
+                    obs_telemetry.update_ratios(updates, params).items()
+                },
+            }
+        return new_params, opt_state, metrics
 
     return train_step
 

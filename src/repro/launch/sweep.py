@@ -22,6 +22,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 from typing import Any, Callable, List, Optional, Sequence
 
@@ -101,12 +102,18 @@ def run_sweep(
     n_devices: Optional[int] = None,
     log_every: int = 10,
     verbose: bool = True,
+    tracer=None,
 ) -> SweepResult:
     """Run a batched HP sweep with the candidate axis sharded across devices.
 
     Pads the candidate list to a device-count multiple (duplicating the last
     candidate; padding rows are dropped from the result) so every device
     holds the same number of candidate slices.
+
+    ``tracer`` (a ``repro.obs.Tracer``) records the candidate lifecycle:
+    one ``sweep`` span for the run, a ``prune`` instant event whenever the
+    alive count drops (with the pruned candidate indices), and a final
+    ``sweep_done`` event carrying the best candidate.
     """
     candidates = list(candidates)
     if not candidates:
@@ -122,6 +129,8 @@ def run_sweep(
             f"{ndev} device(s); optimizer={optimizer}"
         )
 
+    prev_active = np.ones((n,), bool)
+
     def stream(t: int, losses: np.ndarray, active: np.ndarray):
         if verbose and log_every and (t % log_every == 0 or t == steps - 1):
             alive = losses[: n][active[: n]]
@@ -131,16 +140,37 @@ def run_sweep(
                 f"alive {int(active[:n].sum())}/{n}",
                 flush=True,
             )
+        if tracer is not None:
+            nonlocal prev_active
+            act = np.asarray(active[:n], bool)
+            pruned = np.nonzero(prev_active & ~act)[0]
+            if pruned.size:
+                tracer.event(
+                    "prune", step=t,
+                    candidates=[int(i) for i in pruned],
+                    alive=int(act.sum()),
+                )
+            prev_active = act
 
     t0 = time.time()
-    res = train_proxy_batched(
-        cfg, padded, steps=steps, batch_size=batch_size, seq_len=seq_len,
-        seed=seed, optimizer=optimizer, prune_factor=prune_factor,
-        prune_every=prune_every,
-        put_candidate_axis=leading_axis_put(mesh), stream=stream,
+    span = (
+        tracer.span("sweep", candidates=n, steps=steps, devices=ndev)
+        if tracer is not None else contextlib.nullcontext()
     )
+    with span:
+        res = train_proxy_batched(
+            cfg, padded, steps=steps, batch_size=batch_size, seq_len=seq_len,
+            seed=seed, optimizer=optimizer, prune_factor=prune_factor,
+            prune_every=prune_every,
+            put_candidate_axis=leading_axis_put(mesh), stream=stream,
+        )
     dt = time.time() - t0
     res = _sliced(res, n)
+    if tracer is not None:
+        tracer.event(
+            "sweep_done", best=res.best_index, best_loss=res.best_loss,
+            steps_run=int(res.steps_run),
+        )
     if verbose:
         rate = n * res.steps_run / max(dt, 1e-9)
         print(f"[sweep] done in {dt:.1f}s — {rate:.1f} candidate-steps/sec")

@@ -66,6 +66,7 @@ def train_loop(
     mesh=None,
     model_parallel: int = 1,
     fsdp: bool = False,
+    obs=None,
 ) -> Dict[str, Any]:
     """One training run (possibly resuming). Returns final metrics.
 
@@ -75,6 +76,13 @@ def train_loop(
     ZeRO-3-sharded over "data" (see docs/distributed.md).  The requested
     degree degrades by halving until it divides the device count, so the
     same invocation runs on 1 CPU and on a pod.
+
+    ``obs`` (a :class:`repro.obs.TrainObs`) attaches the observability
+    subsystem: loss/grad-norm/step-time metrics into its registry every
+    step, and — when ``obs.telemetry`` — the µP-health aux (activation
+    coord sizes, logit scale, update-to-weight ratios) emitted by the
+    jitted step and drained host-side every ``obs.every`` steps into
+    ``obs.ring`` / through ``obs.detector`` (see docs/observability.md).
     """
     xfer = transfer(hps, cfg)
     cfg = cfg.replace(**xfer["model"])
@@ -86,9 +94,10 @@ def train_loop(
         "adamw", parametrization=model.p13n, meta=model.meta,
         schedule=schedule, weight_decay=hps.weight_decay, **xfer["optim"],
     )
+    telemetry = bool(obs is not None and obs.telemetry)
     step_fn = steps_lib.make_train_step(
         model, opt, num_microbatches=num_microbatches,
-        compress_grads=compress_grads,
+        compress_grads=compress_grads, telemetry=telemetry,
     )
 
     if mesh is None:
@@ -137,11 +146,27 @@ def train_loop(
             batch = {
                 k: batch_sh(jnp.asarray(v)) for k, v in pipe.batch(t).items()
             }
-            params, opt_state, metrics = jit_step(params, opt_state, batch)
-            loss = float(metrics["loss"])
+            if obs is not None and obs.tracer is not None:
+                with obs.tracer.span("train_step", phase="train_step", step=t):
+                    params, opt_state, metrics = jit_step(
+                        params, opt_state, batch
+                    )
+                    loss = float(metrics["loss"])
+            else:
+                params, opt_state, metrics = jit_step(params, opt_state, batch)
+                loss = float(metrics["loss"])
             dt = time.time() - t0
             step_times.append(dt)
             losses.append(loss)
+            if obs is not None:
+                aux = None
+                if telemetry and t % max(obs.every, 1) == 0:
+                    aux = jax.device_get(metrics["obs"])
+                obs.record_step(
+                    t, loss=loss, grad_norm=float(metrics["grad_norm"]),
+                    dt=dt, tokens=batch_size * seq_len,
+                    width=cfg.d_model, aux=aux,
+                )
             # straggler watchdog: flag steps >> median
             if len(step_times) > 10:
                 med = float(np.median(step_times[-50:]))
@@ -193,6 +218,14 @@ def main(argv=None):
                     help="additionally ZeRO-3-shard weights over the data "
                          "axis (all-gather/reduce-scatter pairs inserted by "
                          "SPMD; overlapped via the async-collective flags)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="emit the µP-health aux from the train step "
+                         "(activation coord sizes, logit scale, update/"
+                         "weight ratios; see docs/observability.md)")
+    ap.add_argument("--obs-dir", default=None,
+                    help="write metrics.prom / metrics.json (+ telemetry "
+                         "ring and trace when --telemetry) here at exit; "
+                         "implies metrics collection")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -206,12 +239,22 @@ def main(argv=None):
         cfg = cfg.scaled(args.width)
     hps = HParams(lr=args.lr, sigma=args.sigma)
 
+    obs = None
+    if args.telemetry or args.obs_dir:
+        from repro.obs import MetricsRegistry, TrainObs, Tracer
+
+        obs = TrainObs(
+            metrics=MetricsRegistry(),
+            telemetry=args.telemetry,
+            tracer=Tracer() if args.obs_dir else None,
+        )
+
     kw = dict(
         steps=args.steps, hps=hps, ckpt_dir=args.ckpt_dir,
         batch_size=args.batch_size, seq_len=args.seq_len,
         ckpt_every=args.ckpt_every, num_microbatches=args.microbatches,
         compress_grads=args.compress_grads, seed=args.seed,
-        model_parallel=args.model_parallel, fsdp=args.fsdp,
+        model_parallel=args.model_parallel, fsdp=args.fsdp, obs=obs,
     )
     try:
         out = train_loop(cfg, simulate_failure_at=args.simulate_failure, **kw)
@@ -220,6 +263,20 @@ def main(argv=None):
         if not args.ckpt_dir:
             raise
         out = train_loop(cfg, simulate_failure_at=None, **kw)
+    if obs is not None and args.obs_dir:
+        import json
+        import os
+
+        os.makedirs(args.obs_dir, exist_ok=True)
+        obs.metrics.write_prometheus(os.path.join(args.obs_dir, "metrics.prom"))
+        obs.metrics.write_json(os.path.join(args.obs_dir, "metrics.json"))
+        if obs.ring is not None:
+            with open(os.path.join(args.obs_dir, "telemetry.jsonl"), "w") as f:
+                for rec in obs.ring.records:
+                    f.write(json.dumps(rec) + "\n")
+        if obs.tracer is not None:
+            obs.tracer.dump(os.path.join(args.obs_dir, "trace.jsonl"))
+        print(f"[obs] wrote {args.obs_dir}/metrics.prom")
     print(f"[train] done: final loss {out['final_loss']:.4f}")
     return out
 

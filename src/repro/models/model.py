@@ -191,6 +191,7 @@ class Model:
         hp=None,
         paged=None,
         full_cache: bool = False,
+        collect_stats: bool = False,
     ) -> Tuple[jax.Array, Optional[Dict]]:
         """``hp`` (a core.hp.RuntimeHP or None) supplies *traced* per-call
         forward multipliers (alpha_embed/alpha_attn/alpha_output) — used by
@@ -199,7 +200,15 @@ class Model:
         ``paged`` (a serving.kv_cache.PagedState or None) switches decode
         onto the paged block pool + flash-decode kernel; ``full_cache``
         makes prefill emit full-length identity-ordered caches for the
-        engine's page scatter (see serving/kv_cache.py)."""
+        engine's page scatter (see serving/kv_cache.py).
+
+        ``collect_stats`` switches the return to a 3-tuple ``(logits,
+        new_cache, stats)`` where ``stats`` is a fixed-shape dict of
+        coordinate sizes (core.coord_check's mean |x|: embedding, per-block
+        residual stream, pre-readout norm, logits) — the µP-health
+        telemetry aux (obs/telemetry.py).  Distinct from ``loss_fn``'s
+        ``collect_acts`` (whose act-key set is pinned by the coord-check
+        golden fixtures)."""
         cfg = self.cfg
         B, S = tokens.shape
         aligned = positions is None  # static: we construct 0..S-1 ourselves
@@ -212,6 +221,11 @@ class Model:
         else:
             memory = self._memory(params, memory_inputs or {})
         x = self._embed(params, tokens, hp=hp)
+        stats = {} if collect_stats else None
+        if collect_stats:
+            # same statistic (and value) as the offline coord check's
+            # "embed" record: mean |embedding output|
+            stats["embed"] = tfm.coord_size(x)
         if cfg.family == "encdec":
             pe = sinusoidal(cfg.max_seq_len, cfg.d_model, x.dtype)
             x = x + pe[positions]
@@ -220,6 +234,7 @@ class Model:
             mode=mode, cache_len=cache_len, hp=hp,
             aligned_positions=aligned,
             paged=paged, full_prefill_cache=full_cache,
+            stats=stats,
         )
         x, new_cache = tfm.run_stack(
             cfg, params["groups"], self.meta["groups"],
@@ -227,11 +242,21 @@ class Model:
         )
         x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
         logits = self._readout(params, x, hp=hp)
+        if collect_stats:
+            stats["final_norm"] = tfm.coord_size(x)
+            stats["logits"] = tfm.coord_size(logits)
+            return logits, new_cache, stats
         return logits, new_cache
 
     # ------------------------------------------------------------------
-    def loss_fn(self, params, batch, collect_acts: bool = False, hp=None):
+    def loss_fn(self, params, batch, collect_acts: bool = False, hp=None,
+                collect_stats: bool = False):
         """Next-token CE. batch: tokens (B,S), labels (B,S) (-100 = masked).
+
+        ``collect_stats`` returns ``(loss, stats)`` with the µP-health
+        coordinate-size dict from :meth:`forward` — the telemetry aux
+        (mutually exclusive with ``collect_acts``, whose return contract
+        the coord-check goldens pin).
 
         The per-token CE routes through ops.softmax_cross_entropy — the
         chunked Pallas kernel on TPU (online logsumexp over vocab chunks,
@@ -240,9 +265,19 @@ class Model:
         get zero weight here *and* zero cotangent, so their d-logits vanish
         under either impl.
         """
-        logits, _ = self.forward(
-            params, batch["tokens"], memory_inputs=batch, mode="train", hp=hp
-        )
+        if collect_acts and collect_stats:
+            raise ValueError("collect_acts and collect_stats are exclusive")
+        stats = None
+        if collect_stats:
+            logits, _, stats = self.forward(
+                params, batch["tokens"], memory_inputs=batch, mode="train",
+                hp=hp, collect_stats=True,
+            )
+        else:
+            logits, _ = self.forward(
+                params, batch["tokens"], memory_inputs=batch, mode="train",
+                hp=hp,
+            )
         labels = batch["labels"]
         mask = (labels >= 0).astype(jnp.float32)
         if self.cfg.naive_loss:
@@ -257,6 +292,8 @@ class Model:
         loss = jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
         if collect_acts:
             return loss, {"logits": logits}
+        if collect_stats:
+            return loss, stats
         return loss
 
     # ------------------------------------------------------------------

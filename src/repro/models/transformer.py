@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
+from repro.core.coord_check import _coord_size as coord_size
 from repro.core.infshape import InfDim, InfShape
 from repro.core.meta import ParamMeta
 from repro.core.parametrization import resolve
@@ -72,6 +73,16 @@ class Ctx:
                                          # the engine scatters it into pages
                                          # itself, window semantics applied
                                          # at page granularity
+    stats: Optional[Dict[str, Any]] = None
+                                         # obs telemetry sink: when a dict is
+                                         # supplied, run_stack records the
+                                         # residual stream's coordinate size
+                                         # (core.coord_check's mean |x|)
+                                         # after every block into it — per
+                                         # scan-group stats stack to an
+                                         # (n_groups,) array, so the aux
+                                         # pytree keeps fixed shapes (the
+                                         # zero-recompile requirement)
 
 
 def _alpha_attn(cfg, ctx: Ctx):
@@ -449,10 +460,12 @@ def run_stack(
     have_cache = caches is not None
     # prefill has no input cache but must *emit* one
     collect = have_cache or ctx.mode == "prefill"
+    collect_stats = ctx.stats is not None
 
     def group_fn(x, slices):
         p_slice, c_slice = slices
         new_c = {}
+        st = {}
         for i, kind in enumerate(cfg.pattern):
             k = keys[i]
             c_in = c_slice.get(k) if have_cache else None
@@ -461,7 +474,9 @@ def run_stack(
             )
             if collect:
                 new_c[k] = c_out if c_out is not None else {}
-        return x, new_c
+            if collect_stats:
+                st[k] = coord_size(x)   # residual stream after this block
+        return x, (new_c, st)
 
     if cfg.remat == "full":
         group_fn = jax.checkpoint(group_fn)
@@ -476,9 +491,10 @@ def run_stack(
 
     cache_groups = caches["groups"] if have_cache else {k: {} for k in keys}
     if getattr(cfg, "scan_layers", True):
-        x, new_group_caches = jax.lax.scan(
+        x, (new_group_caches, group_stats) = jax.lax.scan(
             scan_body, x, (group_params, cache_groups)
         )
+        # the scan stacked each per-group scalar to (n_groups,)
     else:
         # unrolled (dry-run costing path: exact per-layer FLOP accounting)
         outs = []
@@ -486,14 +502,17 @@ def run_stack(
             slices = jax.tree_util.tree_map(
                 lambda arr: arr[g], (group_params, cache_groups)
             )
-            x, c_out = scan_body(x, slices)
-            outs.append(c_out)
-        if outs and jax.tree_util.tree_leaves(outs[0]):
-            new_group_caches = jax.tree_util.tree_map(
+            x, out_g = scan_body(x, slices)
+            outs.append(out_g)
+        if outs and jax.tree_util.tree_leaves(outs):
+            new_group_caches, group_stats = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *outs
             )
         else:
-            new_group_caches = {k: {} for k in keys}
+            new_group_caches, group_stats = {k: {} for k in keys}, {}
+    if collect_stats:
+        for k in keys:
+            ctx.stats[f"block/{k}"] = group_stats[k]
 
     new_tail = {}
     for i, kind in enumerate(cfg.tail):
@@ -502,6 +521,8 @@ def run_stack(
         x, c_out = apply_block(cfg, kind, tail_params[k], tmeta[k], x, ctx, c_in)
         if collect:
             new_tail[k] = c_out if c_out is not None else {}
+        if collect_stats:
+            ctx.stats[f"block/tail/{k}"] = coord_size(x)
 
     if collect:
         return x, {"groups": new_group_caches, "tail": new_tail}

@@ -1,0 +1,158 @@
+"""Phase tracing: a lightweight host-side span tracer with JSONL export.
+
+Records where a token's latency actually goes — the phases of a request's
+life in the serving engines (admission -> chunk-prefill -> decode/verify ->
+retire), the sweep engine's candidate lifecycle, and train-loop steps — as
+Chrome-trace-flavored events on a single monotonic clock:
+
+    {"name": "step", "ph": "X", "ts": <us since tracer start>,
+     "dur": <us>, "args": {"phase": "decode", ...}}
+
+``ph`` is "X" (complete span, has ``dur``) or "i" (instant event).  One
+JSON object per line (:meth:`Tracer.dump` / ``path=``), so logs stream and
+cheap tools (jq, pandas) read them without a closing bracket.
+
+Device-side work never appears here directly — a span brackets the *host's*
+view of a dispatched step (which, in the dynamic engine, is synchronized by
+its per-step ``device_get``, so span durations are honest).  For kernel
+attribution, spans carry a ``kernel`` arg naming the Pallas kernels that
+dominate the phase (the names benchmarks/roofline.py profiles), and
+``profile_dir`` wraps a region in ``jax.profiler`` so the JSONL spans can be
+cross-referenced against the XLA trace dump's kernel timeline.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import time
+from typing import Any, Dict, Iterator, List, Optional
+
+# host phase -> the roofline-profiled kernels that dominate it
+# (benchmarks/roofline.py kernel names; see docs/observability.md)
+PHASE_KERNELS: Dict[str, str] = {
+    "prefill": "flash_attention_fwd",
+    "chunk_prefill": "decode_attention_multi",
+    "decode": "decode_attention",
+    "verify": "decode_attention_multi",
+    "train_step": "flash_attention_fwd+flash_attention_bwd+chunked_cross_entropy",
+}
+
+
+class Tracer:
+    """Monotonic-clock span/event recorder.
+
+    ``path`` streams events as JSONL while recording; without it events
+    accumulate in ``self.events`` (bounded by ``max_events``) for a later
+    :meth:`dump`.  ``profile_dir`` arms :meth:`profile` to wrap a region in
+    ``jax.profiler.trace`` (the XLA trace dump); it is a no-op when unset,
+    so call sites don't need to branch.
+    """
+
+    def __init__(self, path: Optional[str] = None,
+                 profile_dir: Optional[str] = None,
+                 max_events: int = 200_000):
+        self.t0 = time.monotonic()
+        self.events: List[Dict[str, Any]] = []
+        self.max_events = max_events
+        self.dropped = 0
+        self.profile_dir = profile_dir
+        self._profiling = False
+        self._file = open(path, "w") if path else None
+
+    # ------------------------------------------------------------------
+    def now_us(self) -> float:
+        return (time.monotonic() - self.t0) * 1e6
+
+    def _emit(self, ev: Dict[str, Any]) -> None:
+        if self._file is not None:
+            self._file.write(json.dumps(ev) + "\n")
+        if len(self.events) >= self.max_events:
+            self.dropped += 1
+            return
+        self.events.append(ev)
+
+    def event(self, name: str, **args: Any) -> None:
+        """Instant event (admission granted, slot retired, candidate pruned)."""
+        self._emit({"name": name, "ph": "i", "ts": self.now_us(),
+                    **({"args": args} if args else {})})
+
+    @contextlib.contextmanager
+    def span(self, name: str, **args: Any) -> Iterator[None]:
+        """Complete span around a host-side phase.  Adds the dominating
+        kernel names for phases the roofline profiles (args win on clash)."""
+        phase = args.get("phase", name)
+        if phase in PHASE_KERNELS and "kernel" not in args:
+            args["kernel"] = PHASE_KERNELS[phase]
+        ts = self.now_us()
+        try:
+            yield
+        finally:
+            self._emit({"name": name, "ph": "X", "ts": ts,
+                        "dur": self.now_us() - ts,
+                        **({"args": args} if args else {})})
+
+    def complete(self, name: str, t_start: float, t_end: float,
+                 **args: Any) -> None:
+        """Record an already-timed span from two ``time.monotonic()`` stamps.
+
+        The non-contextmanager spelling for hot loops (the dynamic engine's
+        per-step path): the caller times the region itself — usually with
+        stamps it already takes for other bookkeeping — and this just emits,
+        skipping the generator-contextmanager machinery of :meth:`span`.
+        """
+        phase = args.get("phase", name)
+        if phase in PHASE_KERNELS and "kernel" not in args:
+            args["kernel"] = PHASE_KERNELS[phase]
+        self._emit({"name": name, "ph": "X",
+                    "ts": (t_start - self.t0) * 1e6,
+                    "dur": (t_end - t_start) * 1e6,
+                    **({"args": args} if args else {})})
+
+    @contextlib.contextmanager
+    def profile(self, label: str = "obs") -> Iterator[None]:
+        """Wrap a region in ``jax.profiler.trace`` when ``profile_dir`` is
+        set (else a pure no-op).  Non-reentrant by construction —
+        jax.profiler allows one active trace — so nested calls no-op too."""
+        if self.profile_dir is None or self._profiling:
+            yield
+            return
+        import jax
+
+        self._profiling = True
+        self.event("profile_start", dir=self.profile_dir, label=label)
+        try:
+            with jax.profiler.trace(self.profile_dir):
+                yield
+        finally:
+            self._profiling = False
+            self.event("profile_stop", label=label)
+
+    # ------------------------------------------------------------------
+    def dump(self, path: str) -> int:
+        """Write accumulated events as JSONL; returns the event count."""
+        with open(path, "w") as f:
+            for ev in self.events:
+                f.write(json.dumps(ev) + "\n")
+        return len(self.events)
+
+    def close(self) -> None:
+        if self._file is not None:
+            self._file.close()
+            self._file = None
+
+    def __enter__(self) -> "Tracer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def load_jsonl(path: str) -> List[Dict[str, Any]]:
+    """Read a trace file back (schema check in tests, ad-hoc analysis)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out

@@ -136,6 +136,10 @@ class PrefixCache:
         self.root = _RadixNode(None, None, -1)
         self._clock = 0
         self._nodes: Dict[int, _RadixNode] = {}   # page -> node
+        # lifetime totals, read by the serving metrics (repro/obs)
+        self.n_hit_pages = 0
+        self.n_inserted = 0
+        self.n_evicted = 0
 
     def __len__(self) -> int:
         return len(self._nodes)
@@ -161,6 +165,7 @@ class PrefixCache:
             child.stamp = self._clock
             pages.append(child.page)
             node = child
+        self.n_hit_pages += len(pages)
         return pages
 
     def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> int:
@@ -183,6 +188,7 @@ class PrefixCache:
                 taken += 1
             child.stamp = self._clock
             node = child
+        self.n_inserted += taken
         return taken
 
     def _evictable(self) -> List[_RadixNode]:
@@ -208,6 +214,7 @@ class PrefixCache:
             del self._nodes[victim.page]
             self.allocator.release(victim.page)
             freed += 1
+        self.n_evicted += freed
         return freed
 
     def drop_all(self) -> int:

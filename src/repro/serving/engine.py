@@ -70,6 +70,7 @@ Two engines share the step bodies above:
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Dict, Optional
@@ -126,10 +127,15 @@ class Engine:
     shards), page tables and stored positions replicate per model shard.
     The serve program still compiles exactly once — the mesh only changes
     *where* the one program's operands live (see docs/distributed.md).
+
+    Pass ``obs`` (a ``repro.obs.ServeObs``) to record serving metrics and
+    phase traces.  The instrumentation is strictly host-side — it never
+    enters a traced program, so the zero-recompile contract holds with
+    observability fully enabled (see docs/observability.md).
     """
 
     def __init__(self, model, ecfg: EngineConfig = EngineConfig(),
-                 draft_model=None, mesh=None):
+                 draft_model=None, mesh=None, obs=None):
         if ecfg.prefix_cache or ecfg.prefill_chunk or ecfg.adaptive_draft or (
             ecfg.n_pages is not None or ecfg.n_window_pages is not None
         ):
@@ -142,6 +148,7 @@ class Engine:
         # cover window + k before wrapping (see kv_cache.build_spec).
         self._init_common(model, ecfg, draft_model, lookahead=ecfg.draft_k)
         self._init_mesh(model, mesh)
+        self.obs = obs
         self.gtable, self.wtable = kv_cache.make_tables(self.spec)
         self._serve = jax.jit(self._run)
 
@@ -287,8 +294,59 @@ class Engine:
             "top_p": p0 if top_p is None else jnp.asarray(top_p, jnp.float32),
             "seed": jnp.asarray(seed, jnp.int32),
         }
-        with self._sharding_ctx():
-            return self._serve(params, draft_params, queue)
+        if self.obs is None:
+            with self._sharding_ctx():
+                return self._serve(params, draft_params, queue)
+        tracer = self.obs.tracer
+        t_start = time.monotonic()
+        span = (
+            tracer.span("serve", engine="static", requests=R)
+            if tracer is not None else contextlib.nullcontext()
+        )
+        with span:
+            with self._sharding_ctx():
+                out = self._serve(params, draft_params, queue)
+            # block inside the span so its duration covers the device work
+            agg = jax.device_get(
+                {k: out[k] for k in ("lengths", "steps", "accepted",
+                                     "proposed")}
+            )
+        self._record_serve(
+            duration=time.monotonic() - t_start, requests=R,
+            tokens=int(np.sum(agg["lengths"])), steps=int(agg["steps"]),
+            accepted=int(agg["accepted"]), proposed=int(agg["proposed"]),
+        )
+        return out
+
+    def _record_serve(self, *, duration, requests, tokens, steps,
+                      accepted, proposed):
+        """End-of-serve aggregate metrics (shared by both engines)."""
+        m = self.obs.metrics
+        m.counter("serve_requests_total", "requests served").inc(requests)
+        m.counter("serve_tokens_total", "tokens generated").inc(tokens)
+        m.counter(
+            "serve_steps_total", "engine loop iterations run"
+        ).inc(steps)
+        m.histogram(
+            "serve_duration_seconds", "wall time per serve() call"
+        ).observe(duration)
+        m.gauge(
+            "serve_tokens_per_second", "last serve() decode throughput"
+        ).set(tokens / max(duration, 1e-9))
+        if proposed:
+            m.counter(
+                "spec_drafts_proposed_total", "speculative drafts proposed"
+            ).inc(proposed)
+            m.counter(
+                "spec_drafts_accepted_total", "speculative drafts accepted"
+            ).inc(accepted)
+            m.gauge(
+                "spec_acceptance_rate", "last serve() draft acceptance rate"
+            ).set(accepted / proposed)
+        m.gauge(
+            "serve_compile_count",
+            "distinct compilations of the serve program (contract: 1)",
+        ).set(self.compile_count())
 
     # ------------------------------------------------------------------
     def _is_eos(self, tok: jax.Array) -> jax.Array:
@@ -722,7 +780,7 @@ class DynamicEngine(Engine):
     """
 
     def __init__(self, model, ecfg: EngineConfig = EngineConfig(),
-                 draft_model=None, mesh=None):
+                 draft_model=None, mesh=None, obs=None):
         C = ecfg.prefill_chunk
         if C < 0 or (C and C % ecfg.page_size):
             raise ValueError(
@@ -742,6 +800,7 @@ class DynamicEngine(Engine):
             lookahead=max(ecfg.draft_k, C - 1 if C else 0),
         )
         self._init_mesh(model, mesh)
+        self.obs = obs
         spec = self.spec
         self.n_pages = ecfg.n_pages or spec.n_global_pages
         self.n_window_pages = (
@@ -756,6 +815,7 @@ class DynamicEngine(Engine):
         )
         self._align = max(C // spec.page_size, 1)
         self._cmax = C if C else ecfg.max_prompt_len
+        self._evicted_seen = 0      # prefix-cache eviction counter watermark
         # host-side mirror of the page tables, shipped to the step as data
         self._gtab = np.zeros((spec.n_slots, spec.gp_cols), np.int32)
         self._wtab = (
@@ -931,6 +991,11 @@ class DynamicEngine(Engine):
         ``prefill_total`` (prompt tokens served from shared pages vs total)
         and — with ``record_times`` — per-token wall-clock timestamps and
         the arrival vector, for the traffic benchmark's latency percentiles.
+        Timestamps are ``time.monotonic()``-based (immune to wall-clock
+        adjustments), relative to serve start.  With ``obs`` attached the
+        same stamps also feed the registry's TTFT / inter-token-latency
+        histograms — the raw-list return is kept for compatibility and is
+        deprecated in favor of the metrics snapshot (docs/observability.md).
         """
         if (self.draft_model is not None) and draft_params is None:
             raise ValueError("speculative engine: serve() needs draft_params")
@@ -1003,10 +1068,18 @@ class DynamicEngine(Engine):
         steps = 0
         chunks_bound = (Pmax // C + 2) if C else 2
         max_steps = R * (Gmax + chunks_bound + 2) + S + 8
-        t0 = time.perf_counter()
+        obs = self.obs
+        metrics = obs.metrics if obs is not None else None
+        tracer = obs.tracer if obs is not None else None
+        step_hist = (
+            metrics.histogram(
+                "serve_step_seconds", "wall time per dynamic-engine step"
+            ) if metrics is not None else None
+        )
+        t0 = time.monotonic()
 
         while pending or cur is not None or occupied:
-            now = time.perf_counter() - t0
+            now = time.monotonic() - t0
             # idle until the next arrival when nothing is running
             if (cur is None and not occupied and pending
                     and arr[pending[0]] > now):
@@ -1050,6 +1123,11 @@ class DynamicEngine(Engine):
                     cur = {"req": req, "slot": slot, "plen": plen,
                            "prompt": prompt, "chunks": chunks, "i": 0,
                            "adm": adm}
+                    if tracer is not None:
+                        tracer.event(
+                            "admission", req=req, slot=slot, plen=plen,
+                            cached=c, chunks=len(chunks) if chunks else 0,
+                        )
             # ---- this step's control block ----
             ctrl = self._ctrl0()
             finishing = None
@@ -1083,13 +1161,31 @@ class DynamicEngine(Engine):
             tables = {"g": jnp.asarray(self._gtab)}
             if self._wtab is not None:
                 tables["w"] = jnp.asarray(self._wtab)
+            t_step = time.monotonic()
             with self._sharding_ctx():
                 st, info = self._step(
                     params, draft_params, st, queue, tables, ctrl
                 )
+            # the device_get syncs, so the span/histogram cover the
+            # device work of this step, not just its dispatch
             info = jax.device_get(info)
             steps += 1
-            tnow = time.perf_counter() - t0
+            t_done = time.monotonic()
+            tnow = t_done - t0
+            if tracer is not None:
+                if ctrl["admit_full"]:
+                    phase = "prefill"
+                elif ctrl["admit_chunk"]:
+                    phase = "chunk_prefill"
+                elif self.draft_model is not None:
+                    phase = "verify"
+                else:
+                    phase = "decode"
+                # complete(), not span(): this loop runs once per generated
+                # token, and the contextmanager protocol costs real µs here
+                tracer.complete("step", t_step, t_done, phase=phase)
+            if step_hist is not None:
+                step_hist.observe(t_done - t_step)
             # ---- host bookkeeping ----
             if finishing is not None:
                 # prompt fully resident: publish its full pages to the
@@ -1117,6 +1213,8 @@ class DynamicEngine(Engine):
                 k_cur[shrink] = np.maximum(k_cur[shrink] - 1, 1)
             for slot in sorted(occupied):
                 if not bool(info["active"][slot]):
+                    if tracer is not None:
+                        tracer.event("retire", slot=slot, req=occupied[slot])
                     self.blocks.retire(slot)
                     del occupied[slot]
                     free.append(slot)
@@ -1142,6 +1240,52 @@ class DynamicEngine(Engine):
             "prefill_cached": prefill_cached,
             "prefill_total": prefill_total,
         }
+        if obs is not None:
+            acc, prop = map(int, jax.device_get(
+                (st["accepted"], st["proposed"])
+            ))
+            self._record_serve(
+                duration=time.monotonic() - t0, requests=R,
+                tokens=int(sum(len(ts) for ts in token_times)),
+                steps=steps, accepted=acc, proposed=prop,
+            )
+            if metrics is not None:
+                ttft = metrics.histogram(
+                    "serve_ttft_seconds", "arrival to first generated token"
+                )
+                itl = metrics.histogram(
+                    "serve_itl_seconds", "inter-token latency"
+                )
+                ttft_vals, itl_vals = [], []
+                for r, ts in enumerate(token_times):
+                    if ts:
+                        ttft_vals.append(ts[0] - arr[r])
+                        itl_vals.extend(np.diff(ts))
+                ttft.observe_many(ttft_vals)
+                itl.observe_many(itl_vals)
+                metrics.counter(
+                    "prefill_prompt_tokens_total", "prompt tokens admitted"
+                ).inc(prefill_total)
+                metrics.counter(
+                    "prefill_cached_tokens_total",
+                    "prompt tokens served from the prefix cache",
+                ).inc(prefill_cached)
+                if self.blocks.cache is not None:
+                    metrics.counter(
+                        "prefix_cache_evicted_pages_total",
+                        "pages LRU-evicted from the prefix cache",
+                    ).inc(self.blocks.cache.n_evicted - self._evicted_seen)
+                    self._evicted_seen = self.blocks.cache.n_evicted
+                    metrics.gauge(
+                        "prefix_cache_pages",
+                        "pages resident in the prefix cache",
+                    ).set(len(self.blocks.cache))
+                metrics.gauge(
+                    "kv_pages_free", "free pages in the global pool"
+                ).set(self.blocks.galloc.n_free)
+                metrics.gauge(
+                    "kv_pages_allocated", "allocated pages (incl. cached)"
+                ).set(self.blocks.galloc.n_allocated)
         if record_times:
             out["token_times"] = token_times
             out["arrivals"] = arr
